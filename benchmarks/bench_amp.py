@@ -1,0 +1,34 @@
+"""Paper Fig. 5 + Fig. 6: AMP speedup predictions + runtime breakdown.
+
+Fig. 5 analogue: per-arch predicted AMP (bf16->fp8-class MXU + halved HBM
+bytes) speedups from the Daydream graph.  Fig. 6 analogue: host-only /
+device-only / parallel breakdown of the simulated baseline vs AMP.
+"""
+
+from __future__ import annotations
+
+from repro.core import whatif, simulate
+
+from .common import BENCH_ARCHS, traced_train, fmt_csv
+
+
+def run() -> str:
+    rows = []
+    for arch in BENCH_ARCHS:
+        bundle = traced_train(arch)
+        base = bundle.simulate()
+        amp = whatif.what_if_amp(bundle.graph).simulate()
+        rows.append([
+            "fig5_amp", arch,
+            f"{base.makespan*1e3:.3f}", f"{amp.makespan*1e3:.3f}",
+            f"{base.makespan/amp.makespan:.3f}",
+        ])
+        for tag, res in (("base", base), ("amp", amp)):
+            b = res.breakdown
+            rows.append([
+                "fig6_breakdown", f"{arch}:{tag}",
+                f"{b['host_only_s']*1e3:.3f}", f"{b['device_only_s']*1e3:.3f}",
+                f"{b['parallel_s']*1e3:.3f}",
+            ])
+    return fmt_csv(rows, ["bench", "arch", "baseline_ms_or_host",
+                          "opt_ms_or_device", "speedup_or_parallel"])

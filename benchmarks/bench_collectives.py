@@ -1,0 +1,39 @@
+"""Paper Fig. 9: collective-primitive model vs theoretical formula vs measured.
+
+Our CollectiveModel implements the NCCL-tests ring formulas [56] on the ICI
+topology.  This bench reports, per payload: the theoretical ring time, the
+hierarchical (BlueConnect-style) decomposition over (data, model) axes, and —
+when >1 local XLA device is available — a measured all-reduce (calibrate.py).
+On the 1-device container the measured column is marked n/a.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import CollectiveModel, MeshTopology
+from repro.core.task import TPU_V5E
+
+from .common import fmt_csv
+
+
+def run() -> str:
+    topo = MeshTopology.multi_pod(2, 16, 16)
+    coll = CollectiveModel(TPU_V5E, topo)
+    rows = []
+    for mb in (1, 8, 64, 256):
+        payload = mb * 1024 * 1024
+        flat = coll.axis_time("all-reduce", payload, 256, "ici")
+        hier = coll.hierarchical_all_reduce(payload, ["model", "data"])
+        cross = coll.hierarchical_all_reduce(payload,
+                                             ["model", "data", "pod"])
+        rows.append(["fig9_collectives", f"{mb}MB",
+                     f"{flat*1e6:.1f}", f"{hier*1e6:.1f}",
+                     f"{cross*1e6:.1f}"])
+    measured = "n/a"
+    if len(jax.devices()) > 1:
+        from repro.core.calibrate import measure_collective_bandwidth
+        measured = f"{measure_collective_bandwidth()/1e9:.2f}GB/s"
+    rows.append(["fig9_collectives", "local_measured_bw", measured, "", ""])
+    return fmt_csv(rows, ["bench", "payload", "flat_ring_us",
+                          "hierarchical_us", "with_pod_axis_us"])

@@ -1,0 +1,65 @@
+"""Paper Table 1 coverage: every modeled optimization, one line each.
+
+Runs all ten what-if recipes (5 evaluated + 5 modeled, paper §5) plus the
+beyond-paper what-ifs on one traced arch and reports the predicted speedup
+(>1: helps; <1: overhead — e.g. Gist/vDNN trade time for memory, matching the
+paper's framing that Daydream also identifies optimizations that DON'T pay).
+"""
+
+from __future__ import annotations
+
+from repro.core import whatif, simulate
+
+from .common import traced_train, layer_grad_bytes, fmt_csv
+
+
+def run() -> str:
+    arch = "tinyllama-1.1b"
+    bundle = traced_train(arch)
+    grads = layer_grad_bytes(arch)
+    acts = {l: 2e6 for l in grads}
+    base = bundle.simulate().makespan
+    g = bundle.graph
+
+    dist = whatif.what_if_distributed(g, grads, 16).graph
+    dist_base = simulate(dist).makespan
+
+    recipes = {
+        "amp": lambda: whatif.what_if_amp(g),
+        "fused_optimizer": lambda: whatif.what_if_fused_optimizer(g),
+        "fused_norm": lambda: whatif.what_if_fused_norm(g),
+        "metaflow_scale_attn_0.7": lambda: whatif.what_if_scale_layer(
+            g, "attn", 0.7),
+        "gist": lambda: whatif.what_if_gist(g, "layer", acts),
+        "vdnn_offload": lambda: whatif.what_if_offload(g, "layer", acts),
+    }
+    dist_recipes = {
+        "distributed_16w": lambda: None,
+        "p3": lambda: whatif.what_if_p3(g, grads, 16, bandwidth=5e9),
+        "blueconnect": lambda: whatif.what_if_blueconnect(
+            dist, [("data", 4), ("model", 4)]),
+        "dgc_1pct": lambda: whatif.what_if_dgc(dist, compression=0.01),
+        "zero": lambda: whatif.what_if_zero(dist, 16),
+        "overlap_collectives": lambda: whatif.what_if_overlap_collectives(
+            dist),
+        "straggler_1.5x": lambda: whatif.what_if_straggler(dist),
+        "bandwidth_2x": lambda: whatif.what_if_bandwidth(dist, 2.0),
+        "grad_accum_4": lambda: whatif.what_if_grad_accum(dist, 4),
+    }
+
+    rows = []
+    for name, fn in recipes.items():
+        ms = fn().simulate().makespan
+        rows.append(["table1_coverage", name, f"{base*1e3:.3f}",
+                     f"{ms*1e3:.3f}", f"{base/ms:.3f}"])
+    for name, fn in dist_recipes.items():
+        if name == "distributed_16w":
+            ms = dist_base
+            ref = base
+        else:
+            ms = fn().simulate().makespan
+            ref = dist_base
+        rows.append(["table1_coverage", name, f"{ref*1e3:.3f}",
+                     f"{ms*1e3:.3f}", f"{ref/ms:.3f}"])
+    return fmt_csv(rows, ["bench", "optimization", "baseline_ms",
+                          "predicted_ms", "predicted_speedup"])

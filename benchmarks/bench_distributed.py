@@ -1,0 +1,35 @@
+"""Paper Fig. 8: distributed-training prediction from a single-worker profile.
+
+Sweeps workers x bandwidth, inserting bucketed wait-free-backprop all-reduce
+tasks (paper Algorithm 6) into the single-device trace.  Ground truth at fleet
+scale needs a fleet; the validation here is the paper's *single-GPU-profile*
+methodology plus exactness checks against the analytic ring model (and the
+multi-host-device measured path in core/calibrate.py).
+"""
+
+from __future__ import annotations
+
+from repro.core import whatif, simulate
+
+from .common import traced_train, layer_grad_bytes, fmt_csv
+
+GBPS = 1e9 / 8
+
+
+def run() -> str:
+    rows = []
+    for arch in ["tinyllama-1.1b", "llama3.2-1b"]:
+        bundle = traced_train(arch)
+        grads = layer_grad_bytes(arch)
+        base = bundle.simulate().makespan
+        for workers in (4, 8, 16, 32):
+            for gbps in (10, 20, 40):
+                tf = whatif.what_if_distributed(
+                    bundle.graph, grads, workers,
+                    bandwidth=gbps * GBPS)
+                ms = tf.simulate().makespan
+                rows.append(["fig8_distributed", arch, workers, gbps,
+                             f"{base*1e3:.3f}", f"{ms*1e3:.3f}",
+                             f"{ms/base:.3f}"])
+    return fmt_csv(rows, ["bench", "arch", "workers", "gbps",
+                          "single_ms", "predicted_ms", "slowdown"])

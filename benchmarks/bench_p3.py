@@ -1,0 +1,34 @@
+"""Paper Fig. 10: Priority-Based Parameter Propagation across bandwidths.
+
+Baseline parameter-server (no slicing, no priority) vs P3 (sliced +
+priority-scheduled) predictions per bandwidth, reproducing the paper's trend:
+P3's win grows as bandwidth shrinks.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core import whatif
+
+from .common import traced_train, layer_grad_bytes, fmt_csv
+
+GBPS = 1e9 / 8
+
+
+def run() -> str:
+    rows = []
+    for arch in ["tinyllama-1.1b", "llama3.2-1b"]:
+        bundle = traced_train(arch)
+        grads = layer_grad_bytes(arch)
+        for gbps in (5, 10, 15, 20):
+            bw = gbps * GBPS
+            base = whatif.what_if_p3(bundle.graph, grads, 4, bandwidth=bw,
+                                     slice_bytes=math.inf,
+                                     priority=False).simulate().makespan
+            p3 = whatif.what_if_p3(bundle.graph, grads, 4, bandwidth=bw,
+                                   priority=True).simulate().makespan
+            rows.append(["fig10_p3", arch, gbps, f"{base*1e3:.3f}",
+                         f"{p3*1e3:.3f}", f"{base/p3:.3f}"])
+    return fmt_csv(rows, ["bench", "arch", "gbps", "baseline_ms",
+                          "p3_ms", "p3_speedup"])

@@ -1,0 +1,48 @@
+"""§Roofline table: render the dry-run artifacts (experiments/dryrun/*.json).
+
+Run the dry-run first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import fmt_csv
+
+DEFAULT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+OPT_DIR = os.environ.get("REPRO_DRYRUN_OPT_DIR", "experiments/dryrun_opt")
+
+
+def _rows(dryrun_dir: str, variant: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if "__" not in os.path.basename(path) or rec.get("status") != "ok":
+            if rec.get("status") == "skipped":
+                rows.append(["roofline", variant, rec["arch"], rec["shape"],
+                             rec["mesh"], "SKIP", "", "", "", "", ""])
+            continue
+        r = rec["roofline"]
+        rows.append([
+            "roofline", variant, rec["arch"], rec["shape"], rec["mesh"],
+            r["bound"],
+            f"{r['compute_s']*1e3:.2f}", f"{r['memory_s']*1e3:.2f}",
+            f"{r['collective_s']*1e3:.2f}",
+            f"{r['useful_compute_ratio']:.3f}",
+            f"{r['roofline_fraction']:.3f}",
+        ])
+    return rows
+
+
+def run(dryrun_dir: str = DEFAULT_DIR) -> str:
+    rows = _rows(dryrun_dir, "baseline") + _rows(OPT_DIR, "optimized")
+    if not rows:
+        rows.append(["roofline", "", "(no dry-run artifacts found — run "
+                     "python -m repro.launch.dryrun --all)", "", "", "", "",
+                     "", "", "", ""])
+    return fmt_csv(rows, ["bench", "variant", "arch", "shape", "mesh",
+                          "bound", "compute_ms", "memory_ms",
+                          "collective_ms", "useful_ratio", "roofline_frac"])

@@ -1,0 +1,65 @@
+"""Shared benchmark plumbing: traced bundles of reduced-arch train steps.
+
+Benchmarks trace *unrolled* (scan_layers=False, remat=none) reduced configs so
+every layer gets its own named scope -> per-layer Daydream tasks, matching the
+paper's per-layer what-if recipes.  Durations are analytical (TPU-v5e model);
+the ground-truth benches (fusedadam, amp) re-pin durations to CPU wall-clock
+via trace_measured.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import TraceBundle, trace_compiled
+from repro.data import make_batch
+from repro.models import build_model, init_params, make_train_step
+from repro.optim import AdamW
+
+BENCH_ARCHS = ["tinyllama-1.1b", "llama3.2-1b", "moonshot-v1-16b-a3b",
+               "mamba2-2.7b", "recurrentgemma-9b"]
+
+
+@functools.lru_cache(maxsize=16)
+def traced_train(arch: str, seq: int = 64, batch: int = 4) -> TraceBundle:
+    cfg = get_smoke_config(arch).with_(scan_layers=False, remat="none")
+    opt = AdamW(lr=1e-3)
+    step = make_train_step(cfg, opt)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    b = {k: jnp.asarray(v) for k, v in
+         make_batch(cfg, seq_len=seq, batch=batch, step=0).items()}
+    return trace_compiled(step, state, b, max_tasks=40_000)
+
+
+def layer_grad_bytes(arch: str) -> Dict[str, float]:
+    """Per-layer gradient payloads from the reduced config's param tree."""
+    cfg = get_smoke_config(arch)
+    spec = init_params(cfg, None)
+    n_layers = max(1, cfg.n_layers)
+    blocks = spec.get("blocks") or spec.get("decoder")
+    per_layer = 0.0
+    if blocks is not None:
+        for leaf in jax.tree.leaves(
+                blocks, is_leaf=lambda x: hasattr(x, "logical")):
+            n = 1
+            for d in leaf.shape[1:]:
+                n *= d
+            per_layer += n * jnp.dtype(leaf.dtype).itemsize
+        n_layers = jax.tree.leaves(
+            blocks, is_leaf=lambda x: hasattr(x, "logical"))[0].shape[0]
+    return {f"layer{i}": float(per_layer) for i in range(n_layers)}
+
+
+def fmt_csv(rows, header) -> str:
+    out = [",".join(header)]
+    for r in rows:
+        out.append(",".join(str(x) for x in r))
+    return "\n".join(out)

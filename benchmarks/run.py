@@ -1,0 +1,56 @@
+"""Benchmark driver — one bench per paper table/figure + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,roofline]
+
+Prints ``name,...`` CSV blocks and writes each to experiments/bench/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+BENCHES = {
+    "fig5_fig6_amp_breakdown": "benchmarks.bench_amp",
+    "fig7_fusedadam": "benchmarks.bench_fusedadam",
+    "fig8_distributed": "benchmarks.bench_distributed",
+    "fig9_collectives": "benchmarks.bench_collectives",
+    "fig10_p3": "benchmarks.bench_p3",
+    "table1_coverage": "benchmarks.bench_coverage",
+    "roofline": "benchmarks.bench_roofline",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+    os.makedirs(args.out, exist_ok=True)
+
+    import importlib
+    failures = []
+    for name, modname in BENCHES.items():
+        if only and not any(o in name for o in only):
+            continue
+        t0 = time.time()
+        print(f"== {name} ==", flush=True)
+        try:
+            mod = importlib.import_module(modname)
+            csv = mod.run()
+        except Exception as e:  # report and continue
+            failures.append((name, repr(e)))
+            print(f"FAILED: {e!r}", flush=True)
+            continue
+        print(csv, flush=True)
+        with open(os.path.join(args.out, f"{name}.csv"), "w") as f:
+            f.write(csv + "\n")
+        print(f"-- {name} done in {time.time()-t0:.1f}s --\n", flush=True)
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

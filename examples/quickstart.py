@@ -1,0 +1,55 @@
+"""Quickstart: train a tiny model, trace it, ask Daydream what-if questions.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import trace_compiled, whatif
+from repro.data import make_batch
+from repro.models import build_model, make_train_step
+from repro.optim import AdamW
+
+# ----------------------------------------------------------- 1. a model
+cfg = get_smoke_config("tinyllama-1.1b").with_(scan_layers=False,
+                                               remat="none")
+opt = AdamW(lr=1e-3)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+state = {"params": params, "opt": opt.init(params),
+         "step": jnp.zeros((), jnp.int32)}
+batch = {k: jnp.asarray(v) for k, v in
+         make_batch(cfg, seq_len=64, batch=4, step=0).items()}
+
+# ----------------------------------------------------------- 2. a few steps
+step = jax.jit(make_train_step(cfg, opt))
+for i in range(5):
+    state, metrics = step(state, batch)
+    print(f"step {i}: loss={float(metrics['loss']):.4f}")
+
+# ------------------------------------------- 3. Daydream: trace + simulate
+bundle = trace_compiled(make_train_step(cfg, opt), state, batch)
+base = bundle.simulate()
+print(f"\nbaseline simulated step: {base.makespan*1e3:.3f} ms "
+      f"({len(bundle.graph)} tasks)")
+print("breakdown:", {k: f"{v*1e3:.2f}ms" for k, v in base.breakdown.items()})
+
+# ------------------------------------------------- 4. what-if questions
+amp = whatif.what_if_amp(bundle.graph).simulate()
+print(f"What if mixed precision?      {base.makespan/amp.makespan:.2f}x")
+
+fused = whatif.what_if_fused_optimizer(bundle.graph,
+                                       bundle.cost).simulate()
+print(f"What if a fused optimizer?    {base.makespan/fused.makespan:.2f}x")
+
+grads = {f"layer{i}": 5e6 for i in range(cfg.n_layers)}
+dist = whatif.what_if_distributed(bundle.graph, grads, num_workers=16)
+dm = dist.simulate()
+print(f"What about 16-way data parallel?  step becomes "
+      f"{dm.makespan/base.makespan:.2f}x the single-worker step")
+
+bw2 = whatif.what_if_bandwidth(dist.graph, 2.0).simulate()
+print(f"...and with 2x network bandwidth? {dm.makespan/bw2.makespan:.2f}x "
+      f"faster than that")

@@ -1,0 +1,5 @@
+from .registry import (get_config, get_smoke_config, list_archs, SHAPES,
+                       ShapeSpec, cells, runnable)
+
+__all__ = ["get_config", "get_smoke_config", "list_archs", "SHAPES",
+           "ShapeSpec", "cells", "runnable"]

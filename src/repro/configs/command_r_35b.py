@@ -1,0 +1,27 @@
+"""command-r-35b — Cohere Command-R (GQA, no-bias, 256k vocab).
+
+[hf:CohereForAI/c4ai-command-r-v01; unverified]  40L d_model=8192 64H
+(GQA kv=8) d_ff=22528 vocab=256000.  LayerNorm (no bias via attn_bias=False),
+non-gated-style large vocab — the vocab-sharded embedding stress case.
+"""
+
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b",
+    family="dense",
+    n_layers=40,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22528,
+    vocab=256000,
+    norm="layernorm",
+    attn_bias=False,
+    rope_theta=8000000.0,
+    layout="dp",        # §Perf: no-TP DP+FSDP (small/linear arch)
+    serve_fsdp=False,   # weights fit replicated-over-data at serve time
+)
+
+SMOKE = CONFIG.with_(
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=1, d_ff=128, vocab=512)

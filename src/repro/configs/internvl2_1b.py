@@ -1,0 +1,27 @@
+"""internvl2-1b — InternVL2-1B backbone (InternLM2-style GQA decoder).
+
+[arXiv:2404.16821; hf]  24L d_model=896 14H (GQA kv=2) d_ff=4864
+vocab=151655.  The InternViT frontend is a STUB per the assignment:
+``input_specs()`` provides precomputed patch embeddings (n_patches=256).
+"""
+
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab=151655,
+    n_patches=256,
+    rope_theta=1000000.0,
+    layout="dp",        # §Perf: no-TP DP+FSDP (small/linear arch)
+    serve_fsdp=False,   # weights fit replicated-over-data at serve time
+)
+
+SMOKE = CONFIG.with_(
+    n_layers=2, d_model=56, n_heads=7, n_kv_heads=1, d_ff=112, vocab=512,
+    n_patches=4)

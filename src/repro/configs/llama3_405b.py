@@ -1,0 +1,27 @@
+"""llama3-405b — Llama-3.1 405B dense.
+
+[arXiv:2407.21783; unverified]  126L d_model=16384 128H (GQA kv=8)
+d_ff=53248 vocab=128256.
+
+Capacity note (DESIGN.md): training this on a single 256-chip v5e pod is
+over-capacity (params+optimizer ~4 TB); the dry-run reports the honest
+bytes/device and the multi-pod (512-chip) run halves them.
+"""
+
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    d_ff=53248,
+    vocab=128256,
+    rope_theta=500000.0,
+    layout="dp",        # §Perf iter: beats 16-way TP on every roofline term
+)
+
+SMOKE = CONFIG.with_(
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=2, d_ff=256, vocab=512)

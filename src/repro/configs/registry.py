@@ -1,0 +1,90 @@
+"""Architecture registry: the ten assigned (architecture x shape) pools.
+
+Every assigned arch has ``src/repro/configs/<id>.py`` exporting ``CONFIG``
+(exact numbers from the public pool) and ``SMOKE`` (reduced same-family config
+for CPU smoke tests).  The dry-run iterates ``cells()``.
+
+Shape semantics (assignment block):
+  train_4k     seq 4,096   global_batch 256   lowers ``train_step``
+  prefill_32k  seq 32,768  global_batch 32    lowers ``prefill_step``
+  decode_32k   seq 32,768  global_batch 128   lowers ``serve_step`` (1 new tok)
+  long_500k    seq 524,288 global_batch 1     serve_step; sub-quadratic archs
+               only (mamba2, recurrentgemma) — full-attention archs SKIP
+               (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+from repro.models.model import ModelConfig
+
+ARCHS = [
+    "moonshot-v1-16b-a3b",
+    "deepseek-v2-236b",
+    "internvl2-1b",
+    "tinyllama-1.1b",
+    "llama3-405b",
+    "llama3.2-1b",
+    "command-r-35b",
+    "mamba2-2.7b",
+    "recurrentgemma-9b",
+    "seamless-m4t-large-v2",
+]
+
+
+def _module(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_module(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_module(arch)}")
+    return mod.SMOKE
+
+
+def runnable(arch: str, shape: str) -> Tuple[bool, str]:
+    """(runnable?, reason-if-skipped) for a cell, per the assignment rules."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    if spec.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "SKIP(full-attention): 500k dense-KV decode inapplicable"
+    if spec.kind == "decode" and not cfg.decode_supported:
+        return False, "SKIP(no-decoder)"
+    return True, ""
+
+
+def cells(include_skipped: bool = False) -> List[Tuple[str, str]]:
+    out = []
+    for a in ARCHS:
+        for s in SHAPES:
+            ok, _ = runnable(a, s)
+            if ok or include_skipped:
+                out.append((a, s))
+    return out

@@ -1,0 +1,31 @@
+"""seamless-m4t-large-v2 — SeamlessM4T v2 large (enc-dec, multimodal).
+
+[arXiv:2308.11596; hf]  24L (24 enc + 24 dec) d_model=1024 16H (kv=16)
+d_ff=8192 vocab=256206.  The speech frontend (w2v-BERT feature extractor) is
+a STUB per the assignment: ``input_specs()`` provides precomputed frame
+embeddings at d_model.  Classic post-LN transformer FFN (non-gated ReLU).
+"""
+
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,
+    enc_layers=24,
+    dec_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab=256206,
+    gated_mlp=False,
+    activation="relu",
+    norm="layernorm",
+    layout="dp",        # §Perf: no-TP DP+FSDP (small/linear arch)
+    serve_fsdp=False,   # weights fit replicated-over-data at serve time
+)
+
+SMOKE = CONFIG.with_(
+    n_layers=2, enc_layers=2, dec_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=128, vocab=512)

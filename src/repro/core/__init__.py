@@ -1,0 +1,38 @@
+"""Daydream core: dependency-graph what-if performance prediction for DNN
+training/serving on TPU-class hardware (paper: Zhu et al., USENIX ATC 2020).
+
+Public surface:
+
+    from repro.core import (
+        Task, TaskKind, DependencyGraph, simulate, GraphTransform,
+        trace_compiled, trace_measured, CostModel, whatif,
+    )
+"""
+
+from .task import (Task, TaskKind, HardwareSpec, TPU_V5E, HOST_THREAD,
+                   DEVICE_STREAM, DATA_THREAD, DMA_CHANNEL, ici_channel)
+from .graph import DependencyGraph, GraphError
+from .simulate import simulate, SimResult, default_schedule, make_priority_schedule
+from .transform import (GraphTransform, predicted_speedup, by_kind, by_name,
+                        by_layer, by_phase, on_device, all_of, any_of)
+from .costmodel import CostModel, CollectiveModel, MeshTopology
+from .hlo import parse_hlo_module, extract_graph, aggregate_costs, split_op_name
+from .layermap import LayerMap, LayerProfile, bucket_layers
+from .trace import (TraceBundle, trace_compiled, trace_measured,
+                    measure_wallclock, lower_and_compile)
+from . import whatif
+
+__all__ = [
+    "Task", "TaskKind", "HardwareSpec", "TPU_V5E",
+    "HOST_THREAD", "DEVICE_STREAM", "DATA_THREAD", "DMA_CHANNEL", "ici_channel",
+    "DependencyGraph", "GraphError",
+    "simulate", "SimResult", "default_schedule", "make_priority_schedule",
+    "GraphTransform", "predicted_speedup",
+    "by_kind", "by_name", "by_layer", "by_phase", "on_device", "all_of", "any_of",
+    "CostModel", "CollectiveModel", "MeshTopology",
+    "parse_hlo_module", "extract_graph", "aggregate_costs", "split_op_name",
+    "LayerMap", "LayerProfile", "bucket_layers",
+    "TraceBundle", "trace_compiled", "trace_measured", "measure_wallclock",
+    "lower_and_compile",
+    "whatif",
+]

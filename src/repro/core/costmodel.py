@@ -1,0 +1,172 @@
+"""Analytical per-task cost model for the target hardware (TPU v5e-class).
+
+Daydream needs a duration for every task.  On GPU the paper reads durations from
+CUPTI; with no TPU in the loop we derive durations from first principles, the
+same way the paper derives *new* task durations (communication formulas, §4.2.1
+"Duration"; NCCL ring formulas, §6.5):
+
+  - compute/memory ops:  max(FLOPs / peak_FLOPs, bytes / HBM_bw) + issue overhead
+  - collectives:         ring / bidirectional-ring formulas over the mesh axes
+  - host dispatch:       fixed per-program enqueue cost
+  - data loading:        bytes / host IO bandwidth
+
+A *calibrated* mode replaces the hardware constants with CPU-measured ones
+(:mod:`repro.core.calibrate`) so that simulated makespans can be validated
+against wall-clock ground truth in this container.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+from .task import HardwareSpec, TPU_V5E
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshTopology:
+    """Physical interpretation of mesh axes for the collective model.
+
+    ``axis_kind`` maps each mesh axis to the interconnect it travels over:
+    ``ici`` (intra-pod torus links) or ``dcn`` (cross-pod data-centre network).
+    """
+
+    axis_sizes: Dict[str, int]
+    axis_kind: Dict[str, str]
+
+    @staticmethod
+    def single_pod(data: int = 16, model: int = 16) -> "MeshTopology":
+        return MeshTopology({"data": data, "model": model},
+                            {"data": "ici", "model": "ici"})
+
+    @staticmethod
+    def multi_pod(pods: int = 2, data: int = 16, model: int = 16) -> "MeshTopology":
+        return MeshTopology({"pod": pods, "data": data, "model": model},
+                            {"pod": "dcn", "data": "ici", "model": "ici"})
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.axis_sizes.values():
+            n *= s
+        return n
+
+
+class CollectiveModel:
+    """Time model for mesh collectives (paper §6.5 / NCCL-tests formulas [56]).
+
+    Ring algorithms on a bidirectional torus axis of size ``n``:
+
+      all-reduce      : 2 * (n-1)/n * bytes / bw     (reduce-scatter + all-gather)
+      reduce-scatter  :     (n-1)/n * bytes / bw
+      all-gather      :     (n-1)/n * bytes / bw     (bytes = full output size)
+      all-to-all      :     (n-1)/n * bytes / bw     (each device keeps 1/n)
+      permute         :           bytes / bw
+
+    ``bytes`` is the per-device payload.  A per-hop latency term models the
+    (n-1) link traversals.  BlueConnect-style axis decomposition falls out of
+    running the formula per mesh axis (DESIGN.md §2).
+    """
+
+    HOP_LATENCY = 1e-6  # seconds per ring step (link + switch latency)
+
+    def __init__(self, hw: HardwareSpec = TPU_V5E,
+                 topo: Optional[MeshTopology] = None) -> None:
+        self.hw = hw
+        self.topo = topo or MeshTopology.single_pod()
+
+    def _axis_bw(self, kind: str) -> float:
+        if kind == "dcn":
+            return self.hw.dcn_bandwidth
+        return self.hw.ici_bandwidth * self.hw.ici_links_per_axis
+
+    def axis_time(self, op: str, payload_bytes: float, axis_size: int,
+                  kind: str = "ici") -> float:
+        if axis_size <= 1 or payload_bytes <= 0:
+            return 0.0
+        bw = self._axis_bw(kind)
+        frac = (axis_size - 1) / axis_size
+        steps = axis_size - 1
+        if op == "all-reduce":
+            return 2 * frac * payload_bytes / bw + 2 * steps * self.HOP_LATENCY
+        if op in ("reduce-scatter", "all-gather", "all-to-all"):
+            return frac * payload_bytes / bw + steps * self.HOP_LATENCY
+        if op == "collective-permute":
+            return payload_bytes / bw + self.HOP_LATENCY
+        raise ValueError(f"unknown collective {op!r}")
+
+    def group_time(self, op: str, payload_bytes: float, group_size: int,
+                   crosses_pod: bool = False) -> float:
+        """Time for one collective over an opaque replica group.
+
+        Used when the HLO replica groups don't align with a single mesh axis:
+        treat the group as one ring over the slowest link it crosses.
+        """
+        kind = "dcn" if crosses_pod else "ici"
+        return self.axis_time(op, payload_bytes, group_size, kind)
+
+    def hierarchical_all_reduce(self, payload_bytes: float,
+                                axes: Sequence[str]) -> float:
+        """BlueConnect / TPU-hierarchical decomposition over multiple axes:
+        reduce-scatter along each axis in turn, then all-gather in reverse.
+        Payload shrinks by the axis size after each reduce-scatter."""
+        t = 0.0
+        p = payload_bytes
+        for ax in axes:
+            n = self.topo.axis_sizes[ax]
+            t += self.axis_time("reduce-scatter", p, n, self.topo.axis_kind[ax])
+            p /= max(n, 1)
+        for ax in reversed(list(axes)):
+            n = self.topo.axis_sizes[ax]
+            p *= max(n, 1)
+            t += self.axis_time("all-gather", p, n, self.topo.axis_kind[ax])
+        return t
+
+
+@dataclasses.dataclass
+class CostModel:
+    """Duration assignment for HLO-derived tasks."""
+
+    hw: HardwareSpec = dataclasses.field(default_factory=lambda: TPU_V5E)
+    topo: MeshTopology = dataclasses.field(
+        default_factory=MeshTopology.single_pod)
+    # Calibration multipliers (1.0 = analytical model; calibrate.py overrides).
+    compute_scale: float = 1.0
+    memory_scale: float = 1.0
+    collective_scale: float = 1.0
+
+    def __post_init__(self) -> None:
+        self.collectives = CollectiveModel(self.hw, self.topo)
+
+    # ------------------------------------------------------------- durations
+    def compute_time(self, flops: float, bytes_accessed: float) -> float:
+        t_flops = self.compute_scale * flops / self.hw.peak_flops
+        t_bytes = self.memory_scale * bytes_accessed / self.hw.hbm_bandwidth
+        return max(t_flops, t_bytes) + self.hw.op_overhead
+
+    def collective_time(self, op: str, payload_bytes: float, group_size: int,
+                        crosses_pod: bool = False) -> float:
+        t = self.collectives.group_time(op, payload_bytes, group_size, crosses_pod)
+        return self.collective_scale * t + self.hw.op_overhead
+
+    def host_dispatch_time(self) -> float:
+        return self.hw.host_dispatch
+
+    def offload_time(self, bytes_moved: float) -> float:
+        return bytes_moved / self.hw.pcie_bandwidth + self.hw.op_overhead
+
+    # --------------------------------------------------------------- roofline
+    def roofline_terms(self, flops_per_device: float, bytes_per_device: float,
+                       collective_seconds: float) -> Dict[str, float]:
+        """The three §Roofline terms, in seconds (per device ≡ per chip)."""
+        compute = flops_per_device / self.hw.peak_flops
+        memory = bytes_per_device / self.hw.hbm_bandwidth
+        terms = {
+            "compute_s": compute,
+            "memory_s": memory,
+            "collective_s": collective_seconds,
+        }
+        dom = max(terms, key=terms.get)
+        terms["bound"] = dom.replace("_s", "")   # type: ignore[assignment]
+        return terms

@@ -1,0 +1,161 @@
+"""Daydream's runtime simulation — a faithful implementation of paper Algorithm 1.
+
+The simulator traverses the dependency graph, dispatching each frontier task to
+its execution thread and advancing per-thread progress including the task's
+trailing ``gap`` (the paper's mechanism for untraced host time).  The
+``schedule`` function that picks among ready tasks is pluggable exactly as in
+the paper (§4.4 "Schedule"): the default picks the task with the earliest
+effective start time; what-ifs like P3 override it with priority policies.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .graph import DependencyGraph
+from .task import Task, TaskKind, DEVICE_STREAM, HOST_THREAD
+
+# schedule(frontier, progress, earliest_start) -> chosen task
+ScheduleFn = Callable[[List[Task], Dict[str, float], Dict[int, float]], Task]
+
+
+def default_schedule(frontier: List[Task], progress: Dict[str, float],
+                     earliest: Dict[int, float]) -> Task:
+    """Paper default: pick the ready task with the earliest effective start.
+
+    Effective start = max(thread progress, task's dependency-ready time).
+    Ties break on dependency-ready time then uid for determinism.
+    """
+    def key(t: Task) -> Tuple[float, float, int]:
+        eff = max(progress.get(t.thread, 0.0), earliest[t.uid])
+        return (eff, earliest[t.uid], t.uid)
+    return min(frontier, key=key)
+
+
+def make_priority_schedule(priority: Callable[[Task], float]) -> ScheduleFn:
+    """Priority override used by P3-style what-ifs (paper Algorithm 7).
+
+    Among the tasks tied for earliest effective start, prefer the one with the
+    highest ``priority(task)``.
+    """
+    def sched(frontier: List[Task], progress: Dict[str, float],
+              earliest: Dict[int, float]) -> Task:
+        def eff(t: Task) -> float:
+            return max(progress.get(t.thread, 0.0), earliest[t.uid])
+        best_eff = min(eff(t) for t in frontier)
+        candidates = [t for t in frontier if eff(t) <= best_eff + 1e-12]
+        return max(candidates, key=lambda t: (priority(t), -t.uid))
+    return sched
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    start: Dict[int, float]                  # uid -> start time (paper output)
+    finish: Dict[int, float]                 # uid -> start + duration (no gap)
+    thread_busy: Dict[str, float]            # per-thread busy seconds
+    breakdown: Dict[str, float]              # paper Fig.6: host-only / device-only / parallel
+
+    def speedup_over(self, other: "SimResult") -> float:
+        return other.makespan / self.makespan if self.makespan > 0 else float("inf")
+
+
+def _interval_union(intervals: List[Tuple[float, float]]) -> List[Tuple[float, float]]:
+    if not intervals:
+        return []
+    intervals = sorted(intervals)
+    out = [intervals[0]]
+    for s, e in intervals[1:]:
+        ls, le = out[-1]
+        if s <= le:
+            out[-1] = (ls, max(le, e))
+        else:
+            out.append((s, e))
+    return out
+
+
+def _overlap(a: List[Tuple[float, float]], b: List[Tuple[float, float]]) -> float:
+    i = j = 0
+    tot = 0.0
+    while i < len(a) and j < len(b):
+        s = max(a[i][0], b[j][0])
+        e = min(a[i][1], b[j][1])
+        if e > s:
+            tot += e - s
+        if a[i][1] < b[j][1]:
+            i += 1
+        else:
+            j += 1
+    return tot
+
+
+def simulate(graph: DependencyGraph, schedule: Optional[ScheduleFn] = None) -> SimResult:
+    """Paper Algorithm 1.
+
+    Maintains the frontier ``F`` of dependency-ready tasks and per-thread
+    progress ``P``; each iteration picks ``u = schedule(F)``, sets
+    ``u.start = max(P[t], u.start)`` and advances
+    ``P[t] = u.start + u.duration + u.gap``, then releases children whose
+    remaining-parent refcount hits zero, propagating ready times.
+    """
+    sched = schedule or default_schedule
+    ref: Dict[int, int] = {}
+    earliest: Dict[int, float] = {}          # "u.start" accumulator of Algorithm 1
+    frontier: List[Task] = []
+    for t in graph.tasks():
+        ref[t.uid] = len(graph.parents(t))
+        earliest[t.uid] = 0.0
+        if ref[t.uid] == 0:
+            frontier.append(t)
+
+    progress: Dict[str, float] = collections.defaultdict(float)   # P
+    start: Dict[int, float] = {}
+    finish: Dict[int, float] = {}
+    busy: Dict[str, float] = collections.defaultdict(float)
+    busy_intervals: Dict[str, List[Tuple[float, float]]] = collections.defaultdict(list)
+    executed = 0
+
+    while frontier:
+        u = sched(frontier, progress, earliest)
+        frontier.remove(u)
+        t = u.thread
+        s = max(progress[t], earliest[u.uid])
+        start[u.uid] = s
+        end = s + u.duration
+        finish[u.uid] = end
+        progress[t] = end + u.gap
+        busy[t] += u.duration
+        if u.duration > 0:
+            busy_intervals[t].append((s, end))
+        executed += 1
+        done = end + u.gap
+        for c in graph.children(u):
+            ref[c.uid] -= 1
+            earliest[c.uid] = max(earliest[c.uid], done)
+            if ref[c.uid] == 0:
+                frontier.append(c)
+
+    if executed != len(graph):
+        raise RuntimeError(
+            f"simulation deadlock: executed {executed}/{len(graph)} tasks (cycle?)")
+
+    makespan = max(progress.values(), default=0.0)
+
+    # Paper Fig. 6 runtime breakdown: host-only / device-only / host+device parallel.
+    host_iv = _interval_union(
+        [iv for th, ivs in busy_intervals.items() if th == HOST_THREAD for iv in ivs])
+    dev_iv = _interval_union(
+        [iv for th, ivs in busy_intervals.items() if th != HOST_THREAD for iv in ivs])
+    host_busy = sum(e - s for s, e in host_iv)
+    dev_busy = sum(e - s for s, e in dev_iv)
+    par = _overlap(host_iv, dev_iv)
+    breakdown = {
+        "host_only_s": host_busy - par,
+        "device_only_s": dev_busy - par,
+        "parallel_s": par,
+        "idle_s": max(0.0, makespan - (host_busy + dev_busy - par)),
+    }
+    return SimResult(makespan=makespan, start=start, finish=finish,
+                     thread_busy=dict(busy), breakdown=breakdown)

@@ -1,0 +1,115 @@
+"""Task and resource model for Daydream's kernel-granularity dependency graph.
+
+Paper mapping (Daydream §4.2.1): tasks are GPU kernels / CPU calls / data loading /
+communication primitives, each bound to an *execution thread* (CPU process, GPU
+stream, or communication channel).  On the TPU/JAX side the resources are:
+
+  - ``host``        : the host Python/runtime thread that feeds steps (CPU tasks)
+  - ``device``      : the TPU core's compute stream (one XLA program executes
+                      HLO ops in schedule order — the analogue of a CUDA stream)
+  - ``ici:<axis>``  : one communication channel per mesh axis (collectives)
+  - ``dma``         : HBM<->host DMA engine (offload / infeed / outfeed copies)
+  - ``data``        : the data-loading pipeline thread
+
+Every task carries a ``gap`` — Daydream's mechanism (§4.2.1 "Gap") for the
+untraced runtime between consecutive tasks on the same thread — and an optional
+``layer`` tag produced by the task->layer mapping (§4.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict, List, Optional, Tuple
+
+
+class TaskKind(enum.Enum):
+    """Coarse task taxonomy used by selection predicates and what-ifs."""
+
+    COMPUTE = "compute"            # dots / convolutions / fusions on the device stream
+    MEMORY = "memory"              # copies, transposes, dynamic-update-slice, bitcasts
+    COLLECTIVE = "collective"      # all-reduce / all-gather / reduce-scatter / all-to-all / permute
+    HOST = "host"                  # host-side dispatch, callbacks, optimizer driver logic
+    DATA = "data"                  # data loading (one task per micro/mini-batch)
+    SYNC = "sync"                  # device->host completion events / blocking copies
+    OFFLOAD = "offload"            # HBM<->host DMA traffic (vDNN-style what-ifs insert these)
+
+
+# Resource (execution-thread) name constants.
+HOST_THREAD = "host"
+DEVICE_STREAM = "device"
+DATA_THREAD = "data"
+DMA_CHANNEL = "dma"
+
+
+def ici_channel(axis: str) -> str:
+    """Communication channel resource for a mesh axis (e.g. ``ici:data``)."""
+    return f"ici:{axis}"
+
+
+@dataclasses.dataclass
+class Task:
+    """One node of the dependency graph (paper §4.2.1).
+
+    Attributes mirror the paper's task record: execution thread, duration, gap,
+    and layer.  ``flops``/``bytes`` let the analytical cost model re-derive
+    duration after transformations (e.g. precision what-ifs halve bytes).
+    """
+
+    name: str
+    kind: TaskKind
+    thread: str
+    duration: float                 # seconds
+    gap: float = 0.0                # seconds of untraced follow-on host time (§4.2.1)
+    layer: Optional[str] = None     # task->layer mapping (§4.3); None == unmapped
+    phase: Optional[str] = None     # fwd / bwd / update / comm (derived from layer scope)
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    comm_bytes: float = 0.0         # payload bytes for collectives
+    comm_axes: Tuple[str, ...] = () # mesh axes the collective spans
+    attrs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # --- simulation state (reset by the simulator) -------------------------
+    uid: int = -1                   # assigned by the graph; stable identity
+
+    def clone(self) -> "Task":
+        t = dataclasses.replace(self)
+        t.attrs = dict(self.attrs)
+        return t
+
+    def is_on_device(self) -> bool:
+        return self.thread == DEVICE_STREAM
+
+    def is_collective(self) -> bool:
+        return self.kind == TaskKind.COLLECTIVE
+
+    def __repr__(self) -> str:  # keep graphs printable
+        lay = f" layer={self.layer}" if self.layer else ""
+        return (f"Task#{self.uid}({self.name!r}, {self.kind.value}, {self.thread}, "
+                f"{self.duration * 1e6:.2f}us{lay})")
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Target-hardware constants (TPU v5e-class chip unless overridden).
+
+    These are the constants the roofline and the analytical cost model share.
+    """
+
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bandwidth: float = 819e9        # bytes/s per chip
+    ici_bandwidth: float = 50e9         # bytes/s per link per direction
+    ici_links_per_axis: int = 1         # torus links usable per mesh axis
+    dcn_bandwidth: float = 25e9         # bytes/s cross-pod (data-centre network)
+    vmem_bytes: int = 128 * 1024 * 1024
+    hbm_bytes: int = 16 * 1024 * 1024 * 1024
+    op_overhead: float = 0.5e-6         # fixed per-HLO-op issue overhead (seconds)
+    host_dispatch: float = 20e-6        # host enqueue of one device program
+    pcie_bandwidth: float = 32e9        # host<->device DMA for offload what-ifs
+
+    def matmul_time(self, flops: float, bytes_accessed: float) -> float:
+        return max(flops / self.peak_flops, bytes_accessed / self.hbm_bandwidth)
+
+
+TPU_V5E = HardwareSpec()

@@ -1,0 +1,5 @@
+from .pipeline import (SyntheticLM, make_batch, host_shard, Prefetcher,
+                       batch_specs)
+
+__all__ = ["SyntheticLM", "make_batch", "host_shard", "Prefetcher",
+           "batch_specs"]

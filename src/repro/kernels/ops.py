@@ -1,0 +1,134 @@
+"""Jit'd public wrappers for the Pallas kernels: padding, reshaping, dtype
+management.  ``interpret`` defaults to True (this container validates kernels
+via the Pallas interpreter); a TPU deployment flips ``set_interpret(False)``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import fused_adam as _ad
+from . import rmsnorm as _rn
+from . import dgc_topk as _dg
+
+_INTERPRET = True
+
+
+def set_interpret(flag: bool) -> None:
+    global _INTERPRET
+    _INTERPRET = flag
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> Tuple[jax.Array, int]:
+    n = x.shape[axis]
+    target = -(-n // mult) * mult
+    if target == n:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - n)
+    return jnp.pad(x, pad), n
+
+
+# ------------------------------------------------------------------ flash
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, KH, S, D).  Pads D->128k, S->block mult."""
+    B, H, S, D = q.shape
+    import math
+    qp, _ = _pad_to(q, 3, 128)
+    kp, _ = _pad_to(k, 3, 128)
+    vp, _ = _pad_to(v, 3, 128)
+    bq = min(block_q, max(8, S))
+    bk = min(block_k, max(8, S))
+    sm = max(bq, bk)
+    qp, _ = _pad_to(qp, 2, sm)
+    kp, _ = _pad_to(kp, 2, sm)
+    vp, _ = _pad_to(vp, 2, sm)
+    # padded key positions are masked via kv_len; scale uses the real D
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, block_q=bq,
+                              block_k=bk, sm_scale=1.0 / math.sqrt(D),
+                              kv_len=S, interpret=_INTERPRET)
+    return out[:, :, :S, :D]
+
+
+# ------------------------------------------------------------- fused adam
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "wd"))
+def fused_adam(p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array, *,
+               lr, b1: float, b2: float, eps: float, wd: float, c1, c2):
+    """Flat f32 vectors (N,) -> updated (p, m, v)."""
+    N = p.shape[0]
+    lane = _ad.LANE
+
+    def to2d(x):
+        xp, _ = _pad_to(x.astype(jnp.float32), 0, lane)
+        return xp.reshape(-1, lane)
+
+    p2, g2, m2, v2 = map(to2d, (p, g, m, v))
+    rows = p2.shape[0]
+    blk = min(_ad.BLOCK_ROWS, rows)
+    if rows % blk:
+        extra = blk - rows % blk
+        z = jnp.zeros((extra, lane), jnp.float32)
+        p2, g2, m2, v2 = (jnp.concatenate([a, z]) for a in (p2, g2, m2, v2))
+    po, mo, vo = _ad.fused_adam_2d(
+        p2, g2, m2, v2,
+        jnp.asarray(lr, jnp.float32).reshape(1),
+        jnp.asarray(c1, jnp.float32).reshape(1),
+        jnp.asarray(c2, jnp.float32).reshape(1),
+        b1=b1, b2=b2, eps=eps, wd=wd, interpret=_INTERPRET)
+    return (po.reshape(-1)[:N], mo.reshape(-1)[:N], vo.reshape(-1)[:N])
+
+
+# ---------------------------------------------------------------- rmsnorm
+@jax.jit
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """x: (..., D), w: (D,) -> fused RMSNorm over the last dim."""
+    shape = x.shape
+    D = shape[-1]
+    x2 = x.reshape(-1, D)
+    x2p, _ = _pad_to(x2, 1, 128)
+    wp, _ = _pad_to(w, 0, 128)
+    rows = x2p.shape[0]
+    blk = min(_rn.BLOCK_ROWS, rows)
+    padr = 0
+    if rows % blk:
+        padr = blk - rows % blk
+        x2p = jnp.concatenate(
+            [x2p, jnp.zeros((padr, x2p.shape[1]), x2p.dtype)])
+    out = _rn.rmsnorm_2d(x2p, wp, eps=eps, d_real=D, interpret=_INTERPRET)
+    if padr:
+        out = out[:-padr]
+    return out[:, :D].reshape(shape)
+
+
+# --------------------------------------------------------------- dgc mask
+@jax.jit
+def dgc_mask(g: jax.Array, threshold: jax.Array):
+    """Zero entries with |g| < threshold.  Returns (sparse g, kept count)."""
+    shape = g.shape
+    flat = g.reshape(-1).astype(jnp.float32)
+    N = flat.shape[0]
+    lane = _dg.LANE
+    fp, _ = _pad_to(flat, 0, lane)
+    g2 = fp.reshape(-1, lane)
+    rows = g2.shape[0]
+    blk = min(_dg.BLOCK_ROWS, rows)
+    padr = 0
+    if rows % blk:
+        padr = blk - rows % blk
+        g2 = jnp.concatenate([g2, jnp.zeros((padr, lane), jnp.float32)])
+    out, cnt = _dg.dgc_threshold_2d(
+        g2, jnp.asarray(threshold, jnp.float32).reshape(1),
+        interpret=_INTERPRET)
+    if padr:
+        out, cnt = out[:-padr], cnt[:-padr]
+    sparse = out.reshape(-1)[:N].reshape(shape).astype(g.dtype)
+    # padded zeros never pass |0| >= thr for thr > 0
+    return sparse, jnp.sum(cnt)

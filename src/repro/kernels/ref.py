@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, KH, S, D) — naive full-score attention."""
+    B, H, S, D = q.shape
+    KH = k.shape[1]
+    G = H // KH
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf)
+    s = s / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def fused_adam_ref(p, g, m, v, *, lr, b1, b2, eps, wd, c1, c2):
+    p = p.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    m_new = b1 * m + (1 - b1) * g
+    v_new = b2 * v + (1 - b2) * g * g
+    step = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps) + wd * p
+    return p - lr * step, m_new, v_new
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def dgc_topk_ref(g, ratio: float):
+    """Exact top-|k|: returns (sparse gradient, k, threshold)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(round(ratio * flat.size)))
+    vals = jnp.sort(jnp.abs(flat))[::-1]
+    thr = vals[k - 1]
+    sparse = jnp.where(jnp.abs(flat) >= thr, flat, 0.0)
+    return sparse.reshape(g.shape).astype(g.dtype), k, thr

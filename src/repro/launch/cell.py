@@ -1,0 +1,126 @@
+"""Build one (architecture x shape) dry-run cell: step fn + abstract args.
+
+Everything here must run under ``jax.set_mesh(mesh)`` so the logical-axis
+rules resolve against the target mesh.  No device memory is allocated —
+inputs are ShapeDtypeStructs (the shannon/kernels pattern).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ShapeSpec
+from repro.models.model import (ModelConfig, init_params, input_specs,
+                                cache_spec, make_train_step, make_serve_step,
+                                make_prefill_step)
+from repro.models.paramdecl import (SpecLeaf, specs_of, shapes_of)
+from repro.optim import AdamW
+from repro.sharding import ShardingRules, DEFAULT_RULES
+
+
+def _is_leaf(x):
+    return isinstance(x, SpecLeaf)
+
+
+def _ns_tree(tree, mesh, rules: ShardingRules):
+    spec_tree = specs_of(tree, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclasses.dataclass
+class Cell:
+    fn: Callable
+    args: Tuple[Any, ...]             # ShapeDtypeStruct trees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+
+    def jit(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jit().lower(*self.args)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               rules: Optional[ShardingRules] = None,
+               optimizer: Optional[AdamW] = None) -> Cell:
+    if rules is None:
+        is_train = shape.kind == "train"
+        layout = cfg.layout if is_train else cfg.serve_layout
+        # adaptive resolution: pure-DP needs the batch to cover the whole
+        # mesh (e.g. batch 256 on the 512-chip multi-pod mesh would leave
+        # the model axis idle and replicate compute 16x) — degrade to the
+        # weight-gather FSDP + TP layout instead.
+        if layout == "dp" and shape.global_batch % mesh.devices.size != 0:
+            layout = "v2"
+            cfg = cfg.with_(**({"layout": "v2"} if is_train
+                               else {"serve_layout": "v2"}))
+        fsdp = True if is_train else cfg.serve_fsdp
+        rules = ShardingRules(layout=layout, fsdp=fsdp)
+    params_spec = init_params(cfg, None)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt = optimizer or AdamW()
+        state_spec = {"params": params_spec, "opt": opt.init(params_spec),
+                      "step": SpecLeaf((), jnp.dtype(jnp.int32), ())}
+        batch_spec = input_specs(cfg, kind="train", seq_len=shape.seq_len,
+                                 global_batch=shape.global_batch)
+        state_ns = _ns_tree(state_spec, mesh, rules)
+        batch_ns = _ns_tree(batch_spec, mesh, rules)
+        fn = make_train_step(cfg, opt)
+        return Cell(
+            fn=fn,
+            args=(shapes_of(state_spec), shapes_of(batch_spec)),
+            in_shardings=(state_ns, batch_ns),
+            out_shardings=(state_ns, {"loss": rep, "grad_norm": rep}),
+            donate_argnums=(0,),
+        )
+
+    if shape.kind == "prefill":
+        batch_spec = input_specs(cfg, kind="prefill", seq_len=shape.seq_len,
+                                 global_batch=shape.global_batch)
+        cspec = cache_spec(cfg, shape.global_batch, shape.seq_len)
+        params_ns = _ns_tree(params_spec, mesh, rules)
+        batch_ns = _ns_tree(batch_spec, mesh, rules)
+        cache_ns = _ns_tree(cspec, mesh, rules)
+        tok_ns = _ns_tree(SpecLeaf((shape.global_batch, 1),
+                                   jnp.dtype(jnp.int32), ("batch", None)),
+                          mesh, rules)
+        fn = make_prefill_step(cfg)
+        return Cell(
+            fn=fn,
+            args=(shapes_of(params_spec), shapes_of(batch_spec)),
+            in_shardings=(params_ns, batch_ns),
+            out_shardings=(tok_ns, cache_ns),
+            donate_argnums=(),
+        )
+
+    if shape.kind == "decode":
+        cspec = cache_spec(cfg, shape.global_batch, shape.seq_len)
+        tok_spec = SpecLeaf((shape.global_batch, 1), jnp.dtype(jnp.int32),
+                            ("batch", None))
+        pos_spec = SpecLeaf((), jnp.dtype(jnp.int32), ())
+        params_ns = _ns_tree(params_spec, mesh, rules)
+        cache_ns = _ns_tree(cspec, mesh, rules)
+        tok_ns = _ns_tree(tok_spec, mesh, rules)
+        fn = make_serve_step(cfg)
+        return Cell(
+            fn=fn,
+            args=(shapes_of(params_spec), shapes_of(cspec),
+                  shapes_of(tok_spec), shapes_of(pos_spec)),
+            in_shardings=(params_ns, cache_ns, tok_ns, rep),
+            out_shardings=(tok_ns, cache_ns),
+            donate_argnums=(1,),
+        )
+
+    raise ValueError(f"unknown shape kind {shape.kind!r}")

@@ -1,0 +1,53 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: run one cell with config overrides, tagged output.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --arch tinyllama-1.1b \
+        --shape train_4k --tag iter2 --set layout=dp --set remat=dots
+"""
+
+import argparse
+
+
+def parse_value(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "True"):
+        return True
+    if v in ("false", "False"):
+        return False
+    return v
+
+
+def main() -> None:
+    from repro.configs import registry
+    from repro.launch.dryrun import run_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_value(v)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    print(f"overrides: {overrides}")
+    run_cell(args.arch, args.shape, args.mesh == "multi",
+             out_dir=args.out, cfg_override=cfg, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from .model import (ModelConfig, build_model, Model, init_params, param_specs,
+                    make_train_step, make_serve_step, make_prefill_step,
+                    input_specs, cache_spec, count_params, active_params)
+from .paramdecl import (SpecLeaf, specs_of, shapes_of, sharded_shapes_of,
+                        split_keys, stacked_init)
+
+__all__ = ["ModelConfig", "build_model", "Model", "init_params",
+           "param_specs", "make_train_step", "make_serve_step",
+           "make_prefill_step", "input_specs", "cache_spec", "count_params",
+           "active_params", "SpecLeaf", "specs_of", "shapes_of",
+           "sharded_shapes_of", "split_keys", "stacked_init"]

@@ -1,0 +1,173 @@
+"""Shared model building blocks — pure JAX, named-scoped, logically sharded.
+
+Every block is an (init, apply) pair over plain pytrees.  Init goes through
+``repro.models.paramdecl`` constructors, so the same code yields real params
+(PRNG key) or SpecLeaf placeholders (key=None) — see paramdecl docstring.
+``jax.named_scope`` wraps each layer so Daydream's task->layer mapping
+(core/layermap.py) is exact.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard, use_weight
+from .paramdecl import (normal_param, zeros_param, ones_param, split_keys)
+
+Params = Dict[str, Any]
+
+ACTIVATIONS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+               "tanh": jnp.tanh}
+
+
+# --------------------------------------------------------------- rmsnorm
+def rmsnorm_init(key, d: int, dtype) -> Params:
+    return {"scale": ones_param(key, (d,), dtype, None)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    with jax.named_scope("norm"):
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+        y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(key, d: int, dtype) -> Params:
+    return {"scale": ones_param(key, (d,), dtype, None),
+            "bias": zeros_param(key, (d,), dtype, None)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    with jax.named_scope("norm"):
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -------------------------------------------------------------- embedding
+def embedding_init(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": normal_param(key, (vocab, d), dtype, "vocab_mega", "fsdp",
+                                  scale=0.02)}
+
+
+def embed(p: Params, ids: jax.Array) -> jax.Array:
+    with jax.named_scope("embed"):
+        table = use_weight(p["table"], "vocab", None)
+        out = jnp.take(table, ids, axis=0)
+        return shard(out, "batch", None, None)
+
+
+def unembed_logits(p: Params, x: jax.Array) -> jax.Array:
+    """(..., d) @ (vocab, d)^T -> (..., vocab), vocab-sharded."""
+    with jax.named_scope("unembed"):
+        logits = jnp.einsum("...d,vd->...v", x,
+                            use_weight(p["table"], "vocab", None))
+        return shard(logits, "batch", None, "vocab")
+
+
+# -------------------------------------------------------------------- mlp
+def mlp_init(key, d: int, d_ff: int, dtype, *, gated: bool = True,
+             bias: bool = False) -> Params:
+    k1, k2, k3 = split_keys(key, 3)
+    p: Params = {
+        "w_up": normal_param(k1, (d, d_ff), dtype, "fsdp", "ff_mega"),
+        "w_down": normal_param(k2, (d_ff, d), dtype, "ff", "out_fsdp"),
+    }
+    if gated:
+        p["w_gate"] = normal_param(k3, (d, d_ff), dtype, "fsdp", "ff_mega")
+    if bias:
+        p["b_up"] = zeros_param(k1, (d_ff,), dtype, "ff")
+        p["b_down"] = zeros_param(k2, (d,), dtype, None)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, *, activation: str = "silu") -> jax.Array:
+    with jax.named_scope("mlp"):
+        act = ACTIVATIONS[activation]
+        w_up = use_weight(p["w_up"], None, "ff")
+        up = jnp.einsum("...d,df->...f", x, w_up)
+        if "b_up" in p:
+            up = up + p["b_up"]
+        if "w_gate" in p:
+            gate = act(jnp.einsum("...d,df->...f", x,
+                                  use_weight(p["w_gate"], None, "ff")))
+            h = gate * up
+        else:
+            h = act(up)
+        h = shard(h, "batch", None, "ff")
+        out = jnp.einsum("...f,fd->...d", h,
+                         use_weight(p["w_down"], "ff", None))
+        if "b_down" in p:
+            out = out + p["b_down"]
+        return out
+
+
+# ------------------------------------------------------- chunked CE loss
+def softmax_cross_entropy_chunked(embed_params: Params, x: jax.Array,
+                                  labels: jax.Array, mask: Optional[jax.Array],
+                                  chunk: int = 2048) -> jax.Array:
+    """Per-token CE against the unembedding, computed in *sequence* chunks so
+    the full (tokens, vocab) logit tensor never materializes — essential for
+    the 256k-vocab architectures.
+
+    Chunking runs along the sequence dim with the batch dim kept intact (and
+    batch-sharded): chunking across the flattened (B*S) token axis crosses
+    batch-shard boundaries and forced GSPMD to all-gather every chunk (§Perf
+    iteration 2; was 2x8.6 GB/device of loss-loop all-gathers).  Tables under
+    256 MB are replicated at use (one small all-gather per pass) instead of
+    keeping the contraction vocab-sharded (one dx all-reduce per chunk).
+    """
+    with jax.named_scope("loss"):
+        from repro.sharding import active_rules, mesh_axis_sizes
+        B, S, D = x.shape
+        m = (mask.astype(jnp.float32) if mask is not None
+             else jnp.ones((B, S), jnp.float32))
+        # chunk size targets ~`chunk` tokens *per device*: divide the global
+        # batch by its shard factor (a global-B divisor here cost 512 scan
+        # trips and a per-trip table gather under the dp layout)
+        sizes = mesh_axis_sizes()
+        phys = active_rules().physical("batch", dim_size=B)
+        axes = (phys,) if isinstance(phys, str) else tuple(phys or ())
+        fac = 1
+        for a in axes:
+            fac *= sizes.get(a, 1)
+        b_dev = max(1, B // max(fac, 1))
+        cs = max(1, min(max(chunk // b_dev, 1), S))
+        nchunk = (S + cs - 1) // cs
+        pad = nchunk * cs - S
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)))
+            m = jnp.pad(m, ((0, 0), (0, pad)))
+        # (nchunk, B, cs, ...): scan over sequence chunks, batch stays sharded
+        xc = x.reshape(B, nchunk, cs, D).transpose(1, 0, 2, 3)
+        yc = labels.reshape(B, nchunk, cs).transpose(1, 0, 2)
+        mc = m.reshape(B, nchunk, cs).transpose(1, 0, 2)
+        table = embed_params["table"]
+        small = table.size * 2 <= 256 * 1024 * 1024
+        # gather ONCE outside the scan (loop-invariant input: the bwd table
+        # gradient then accumulates locally and syncs once, not per chunk)
+        tb = use_weight(table, None if small else "vocab", None)
+
+        @jax.checkpoint   # recompute per-chunk logits in bwd: O(chunk*V) temp
+        def body(carry, inp):
+            xb, yb, mb = inp
+            xb = shard(xb, "batch", None, None)
+            logits = jnp.einsum("bsd,vd->bsv", xb, tb).astype(jnp.float32)
+            if not small:
+                logits = shard(logits, "batch", None, "vocab")
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, yb[..., None], axis=-1)[..., 0]
+            nll = (logz - gold) * mb
+            return carry + jnp.sum(nll), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, yc, mc))
+        denom = jnp.maximum(jnp.sum(m), 1.0)
+        return total / denom

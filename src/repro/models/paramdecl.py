@@ -1,0 +1,162 @@
+"""Parameter declaration: one init function, three products.
+
+Model init code declares every parameter through the constructors below.  The
+same code path then yields, depending on mode:
+
+  * real mode  (``key`` is a PRNG key)   -> initialized, sharding-constrained arrays
+  * spec mode  (``key`` is ``None``)     -> :class:`SpecLeaf` placeholders carrying
+                                            (shape, dtype, logical axes)
+
+``specs_of``/``shapes_of`` turn a spec-mode tree into the PartitionSpec tree /
+ShapeDtypeStruct tree the dry-run needs — so ``in_shardings`` can never drift
+from what init actually builds (single source of truth).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ShardingRules, DEFAULT_RULES, shard
+
+
+@dataclasses.dataclass
+class SpecLeaf:
+    """Abstract parameter: shape + dtype + logical sharding axes."""
+
+    shape: Tuple[int, ...]
+    dtype: Any
+    logical: Tuple[Optional[str], ...]
+
+    def __repr__(self) -> str:
+        return f"SpecLeaf{self.shape}:{jnp.dtype(self.dtype).name}:{self.logical}"
+
+
+jax.tree_util.register_pytree_node(
+    SpecLeaf,
+    lambda l: ((), (l.shape, l.dtype, l.logical)),
+    lambda aux, _: SpecLeaf(*aux),
+)
+
+
+def is_spec_mode(key) -> bool:
+    return key is None
+
+
+def split_keys(key, n: int) -> List:
+    """PRNG split that degrades to Nones in spec mode."""
+    if key is None:
+        return [None] * n
+    return list(jax.random.split(key, n))
+
+
+def _finish(key, shape, dtype, logical, sample: Callable[[], jax.Array]):
+    if key is None:
+        return SpecLeaf(tuple(shape), jnp.dtype(dtype), tuple(logical))
+    return shard(sample(), *logical)
+
+
+def normal_param(key, shape: Sequence[int], dtype, *logical: Optional[str],
+                 scale: Optional[float] = None):
+    """Fan-in scaled gaussian (the default dense/embedding initializer)."""
+    logical = _pad_logical(logical, shape)
+
+    def sample():
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        s = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, tuple(shape), jnp.float32) * s).astype(dtype)
+
+    return _finish(key, shape, dtype, logical, sample)
+
+
+def zeros_param(key, shape: Sequence[int], dtype, *logical: Optional[str]):
+    logical = _pad_logical(logical, shape)
+    return _finish(key, shape, dtype, logical,
+                   lambda: jnp.zeros(tuple(shape), dtype))
+
+
+def ones_param(key, shape: Sequence[int], dtype, *logical: Optional[str]):
+    logical = _pad_logical(logical, shape)
+    return _finish(key, shape, dtype, logical,
+                   lambda: jnp.ones(tuple(shape), dtype))
+
+
+def uniform_param(key, shape: Sequence[int], dtype, *logical: Optional[str],
+                  lo: float = -1.0, hi: float = 1.0):
+    logical = _pad_logical(logical, shape)
+    return _finish(key, shape, dtype, logical,
+                   lambda: jax.random.uniform(
+                       key, tuple(shape), jnp.float32, lo, hi).astype(dtype))
+
+
+def _pad_logical(logical: Sequence[Optional[str]], shape: Sequence[int]
+                 ) -> Tuple[Optional[str], ...]:
+    lg = tuple(logical)
+    if len(lg) < len(shape):
+        lg = (None,) * (len(shape) - len(lg)) + lg
+    return lg
+
+
+# ------------------------------------------------------------- layer stacks
+def stacked_init(n_layers: int, layer_init: Callable[[Any], Any], key):
+    """Initialize ``n_layers`` identical layers stacked on a leading axis.
+
+    Real mode: ``vmap`` the per-layer init over split keys.  Spec mode: run the
+    init once and prepend the layer dimension (replicated) to every leaf.
+    """
+    if key is None:
+        one = layer_init(None)
+        return jax.tree.map(
+            lambda l: SpecLeaf((n_layers,) + l.shape, l.dtype,
+                               (None,) + l.logical, ),
+            one, is_leaf=lambda x: isinstance(x, SpecLeaf))
+    keys = jnp.stack(split_keys(key, n_layers))
+    return jax.vmap(layer_init)(keys)
+
+
+# ------------------------------------------------------------- tree products
+def specs_of(tree, rules: ShardingRules = DEFAULT_RULES):
+    """SpecLeaf tree -> PartitionSpec tree (resolved on the active mesh)."""
+    def leaf(l):
+        if isinstance(l, SpecLeaf):
+            return rules.spec(*l.logical, dim_sizes=list(l.shape))
+        raise TypeError(f"specs_of expects SpecLeaf leaves, got {type(l)}")
+    return jax.tree.map(leaf, tree, is_leaf=lambda x: isinstance(x, SpecLeaf))
+
+
+def shapes_of(tree):
+    """SpecLeaf tree -> ShapeDtypeStruct tree (for .lower with no allocation)."""
+    def leaf(l):
+        if isinstance(l, SpecLeaf):
+            return jax.ShapeDtypeStruct(l.shape, l.dtype)
+        raise TypeError(f"shapes_of expects SpecLeaf leaves, got {type(l)}")
+    return jax.tree.map(leaf, tree, is_leaf=lambda x: isinstance(x, SpecLeaf))
+
+
+def sharded_shapes_of(tree, mesh, rules: ShardingRules = DEFAULT_RULES):
+    """SpecLeaf tree -> ShapeDtypeStruct tree with NamedSharding attached."""
+    from jax.sharding import NamedSharding
+
+    def leaf(l):
+        spec = rules.spec(*l.logical, dim_sizes=list(l.shape))
+        return jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(leaf, tree, is_leaf=lambda x: isinstance(x, SpecLeaf))
+
+
+def count_params(tree) -> int:
+    """Total parameter count for a SpecLeaf tree or a real param tree."""
+    total = 0
+    for l in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, SpecLeaf)):
+        if isinstance(l, SpecLeaf):
+            n = 1
+            for d in l.shape:
+                n *= d
+        else:
+            n = l.size
+        total += n
+    return total

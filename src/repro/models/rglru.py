@@ -1,0 +1,127 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) + local-attention pairing.
+
+Train-time recurrence uses ``jax.lax.associative_scan`` over the sequence — the
+TPU-native parallel-scan analogue of Griffin's custom kernel (log-depth, fully
+vectorized across channels).  Decode carries (conv window, h state) per layer,
+so the ``long_500k`` decode cell is O(window) in memory, not O(S).
+
+Block layout (RecurrentGemma):
+  residual -> norm -> [x-branch: linear -> causal conv4 -> RG-LRU]
+                      [gate-branch: linear -> gelu]
+              merge (x * gate) -> out-proj -> +residual
+RG-LRU:  r_t = sigmoid(W_a x_t + b_a); i_t = sigmoid(W_x x_t + b_x)
+         log a_t = -c * softplus(Lambda) * r_t        (c = 8)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard, use_weight
+from .paramdecl import normal_param, zeros_param, split_keys
+
+Params = Dict[str, Any]
+
+CONV_K = 4
+LRU_C = 8.0
+
+
+def rglru_init(key, d: int, d_rnn: int, dtype) -> Params:
+    k1, k2, k3, k4, k5, k6 = split_keys(key, 6)
+    return {
+        "w_in": normal_param(k1, (d, d_rnn), dtype, "fsdp", "ff_mega"),
+        "w_gate": normal_param(k2, (d, d_rnn), dtype, "fsdp", "ff_mega"),
+        "conv": normal_param(k3, (CONV_K, d_rnn), dtype, None, "heads",
+                             scale=0.5),
+        "w_a": normal_param(k4, (d_rnn, d_rnn), dtype, "heads", "out_fsdp"),
+        "b_a": zeros_param(k4, (d_rnn,), jnp.float32, None),
+        "w_i": normal_param(k5, (d_rnn, d_rnn), dtype, "heads", "out_fsdp"),
+        "b_i": zeros_param(k5, (d_rnn,), jnp.float32, None),
+        "lam": zeros_param(k5, (d_rnn,), jnp.float32, None),
+        "w_out": normal_param(k6, (d_rnn, d), dtype, "heads", "out_fsdp"),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    out = x * kernel[-1]
+    for i in range(1, CONV_K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None, :]
+        out = out + shifted * kernel[CONV_K - 1 - i]
+    return out
+
+
+def _gates(p: Params, xb: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(log_a, beta*i*x) from the conv'd x-branch.  Shapes (B,S,D)."""
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xb,
+                   use_weight(p["w_a"], "heads", None)).astype(jnp.float32)
+        + p["b_a"])
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xb,
+                   use_weight(p["w_i"], "heads", None)).astype(jnp.float32)
+        + p["b_i"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r          # (B,S,D) f32
+    a2 = jnp.exp(2.0 * log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12))
+    b = beta * i * xb.astype(jnp.float32)
+    return log_a, b
+
+
+def rglru_forward(p: Params, x: jax.Array, *, return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d) with parallel-scan recurrence."""
+    with jax.named_scope("rglru"):
+        gate = jax.nn.gelu(jnp.einsum(
+            "bsd,de->bse", x, use_weight(p["w_gate"], None, "heads")))
+        xb_pre = jnp.einsum("bsd,de->bse", x,
+                            use_weight(p["w_in"], None, "heads"))
+        xb_pre = shard(xb_pre, "batch", None, "heads")
+        xb = _causal_conv(xb_pre, p["conv"])
+        log_a, b = _gates(p, xb)
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 + a2, jnp.exp(a2) * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+        y = (h.astype(x.dtype) * gate)
+        y = shard(y, "batch", None, "heads")
+        out = jnp.einsum("bse,ed->bsd", y,
+                         use_weight(p["w_out"], "heads", None))
+        out = shard(out, "batch", None, None)
+        if not return_state:
+            return out
+        S = x.shape[1]
+        tail = jnp.pad(xb_pre, ((0, 0), (CONV_K - 1, 0), (0, 0)))[
+            :, S:S + CONV_K - 1, :]
+        return out, {"conv": tail, "h": h[:, -1]}
+
+
+def rglru_decode(p: Params, x: jax.Array, cache: Params
+                 ) -> Tuple[jax.Array, Params]:
+    """One-token step.  cache: {"conv": (B, K-1, d_rnn), "h": (B, d_rnn)}."""
+    with jax.named_scope("rglru"):
+        gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate"]))[:, 0]
+        xb = jnp.einsum("bsd,de->bse", x, p["w_in"])[:, 0]     # (B, d_rnn)
+        window = jnp.concatenate([cache["conv"], xb[:, None, :]], axis=1)
+        xc = jnp.einsum("bke,ke->be", window, p["conv"].astype(window.dtype))
+        log_a, b = _gates(p, xc[:, None, :])
+        log_a, b = log_a[:, 0], b[:, 0]
+        h = jnp.exp(log_a) * cache["h"] + b                    # f32 state
+        y = (h.astype(x.dtype) * gate)
+        out = jnp.einsum("be,ed->bd", y, p["w_out"])[:, None, :]
+        return out, {"conv": window[:, 1:], "h": h}
+
+
+def rglru_cache_spec(batch: int, d_rnn: int, dtype) -> Params:
+    from .paramdecl import SpecLeaf
+    return {
+        "conv": SpecLeaf((batch, CONV_K - 1, d_rnn), jnp.dtype(dtype),
+                         ("batch", None, "heads")),
+        "h": SpecLeaf((batch, d_rnn), jnp.dtype(jnp.float32),
+                      ("batch", "heads")),
+    }

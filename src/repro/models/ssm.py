@@ -1,0 +1,184 @@
+"""Mamba-2 (SSD — state-space duality) block: chunked train scan + O(1) decode.
+
+TPU adaptation (DESIGN.md §2): the CUDA Mamba kernel is a fused warp-level
+scan; the TPU-native formulation is the SSD *chunked* algorithm — quadratic
+attention-like compute inside fixed-size chunks (MXU-friendly (Q,Q) matmuls)
+with a sequential inter-chunk state recurrence (``lax.scan``).  Decode carries
+(conv window, SSM state) and is O(1) per token — which is why mamba2 runs the
+``long_500k`` cell that dense-attention archs skip.
+
+Simplifications vs the reference CUDA implementation (documented):
+  * n_groups = 1 (B/C shared across heads),
+  * the short causal conv applies to the x branch only,
+  * gate normalization is RMSNorm(y * silu(z)).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard, use_weight
+from .paramdecl import normal_param, zeros_param, ones_param, split_keys
+from .layers import rmsnorm_init, rmsnorm
+
+Params = Dict[str, Any]
+
+CONV_K = 4         # short depthwise conv kernel width
+HEAD_P = 64        # SSD head dim
+
+
+def mamba2_init(key, d: int, d_state: int, dtype, *, expand: int = 2) -> Params:
+    d_inner = expand * d
+    n_heads = d_inner // HEAD_P
+    k1, k2, k3, k4, k5, k6, k7 = split_keys(key, 7)
+    return {
+        "wz": normal_param(k1, (d, d_inner), dtype, "fsdp", "ff_mega"),
+        "wx": normal_param(k2, (d, d_inner), dtype, "fsdp", "ff_mega"),
+        "wB": normal_param(k3, (d, d_state), dtype, "fsdp", "out_fsdp"),
+        "wC": normal_param(k4, (d, d_state), dtype, "fsdp", "out_fsdp"),
+        "w_dt": normal_param(k5, (d, n_heads), dtype, "fsdp", "heads"),
+        "dt_bias": zeros_param(k5, (n_heads,), jnp.float32, "heads"),
+        "A_log": zeros_param(k5, (n_heads,), jnp.float32, "heads"),
+        "D": ones_param(k5, (n_heads,), jnp.float32, "heads"),
+        "conv": normal_param(k6, (CONV_K, d_inner), dtype, None, "heads",
+                             scale=0.5),
+        "norm": rmsnorm_init(k7, d_inner, dtype),
+        "w_out": normal_param(k7, (d_inner, d), dtype, "heads", "out_fsdp"),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds.  x: (B,S,D); kernel: (K,D)."""
+    out = x * kernel[-1]
+    for i in range(1, CONV_K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None, :]
+        out = out + shifted * kernel[CONV_K - 1 - i]
+    return out
+
+
+def mamba2_forward(p: Params, x: jax.Array, *, chunk: int = 128,
+                   return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d) via the SSD chunked algorithm."""
+    with jax.named_scope("ssm"):
+        B_, S, d = x.shape
+        d_inner = p["wx"].shape[-1]
+        H = d_inner // HEAD_P
+        N = p["wB"].shape[-1]
+        z = jnp.einsum("bsd,de->bse", x, use_weight(p["wz"], None, "heads"))
+        xb_pre = jnp.einsum("bsd,de->bse", x,
+                            use_weight(p["wx"], None, "heads"))
+        xb = jax.nn.silu(_causal_conv(xb_pre, p["conv"]))
+        Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+        Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+        dt = jax.nn.softplus(
+            jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)
+            + p["dt_bias"])
+        A = -jnp.exp(p["A_log"])                             # (H,), negative
+        dA = dt * A                                          # (B,S,H) log-decay
+
+        X = xb.reshape(B_, S, H, HEAD_P)
+        Xe = (X * dt[..., None].astype(X.dtype))             # dt-scaled input
+
+        chunk = min(chunk, S)
+        nc = (S + chunk - 1) // chunk
+        pad = nc * chunk - S
+        if pad:
+            X = jnp.pad(X, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Xe = jnp.pad(Xe, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+            dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+
+        def to_chunks(t):
+            return t.reshape((B_, nc, chunk) + t.shape[2:]).transpose(
+                (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+        Xc, Xec, Bc, Cc = map(to_chunks, (X, Xe, Bm, Cm))
+        dAc = to_chunks(dA)
+
+        def body(state, inp):
+            xq, xe, bq, cq, da = inp        # (B,Q,H,P),(B,Q,H,P),(B,Q,N)x2,(B,Q,H)
+            cum = jnp.cumsum(da, axis=1)                       # (B,Q,H)
+            # intra-chunk (attention-like) term
+            seg = cum[:, :, None, :] - cum[:, None, :, :]      # (B,Q,Q,H) i,j
+            Q = xq.shape[1]
+            causal = jnp.tril(jnp.ones((Q, Q), bool))
+            L = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+            scores = jnp.einsum("bin,bjn->bij", cq.astype(jnp.float32),
+                                bq.astype(jnp.float32))
+            M = (scores[..., None] * L).astype(xq.dtype)       # (B,Q,Q,H)
+            y_intra = jnp.einsum("bijh,bjhp->bihp", M, xe)
+            # inter-chunk term from carried state
+            decay_in = jnp.exp(cum).astype(xq.dtype)           # (B,Q,H)
+            y_inter = jnp.einsum("bin,bhpn->bihp", cq, state) \
+                * decay_in[..., None]
+            # state update
+            a_all = jnp.exp(cum[:, -1])                        # (B,H)
+            w = jnp.exp(cum[:, -1:, :] - cum).astype(xq.dtype)  # decay j..end
+            state = state * a_all[:, :, None, None].astype(state.dtype) \
+                + jnp.einsum("bjn,bjhp,bjh->bhpn", bq, xe, w)
+            y = y_intra + y_inter + xq * p["D"][None, None, :, None].astype(
+                xq.dtype)
+            return state, y
+
+        state0 = jnp.zeros((B_, H, HEAD_P, N), x.dtype)
+        state_f, Yc = jax.lax.scan(body, state0, (Xc, Xec, Bc, Cc, dAc))
+        Y = Yc.transpose(1, 0, 2, 3, 4).reshape(B_, nc * chunk, H, HEAD_P)
+        Y = Y[:, :S].reshape(B_, S, d_inner)
+        Y = rmsnorm(p["norm"], Y * jax.nn.silu(z))
+        out = jnp.einsum("bse,ed->bsd", Y,
+                         use_weight(p["w_out"], "heads", None))
+        out = shard(out, "batch", None, None)
+        if not return_state:
+            return out
+        tail = jnp.pad(xb_pre, ((0, 0), (CONV_K - 1, 0), (0, 0)))[
+            :, S:S + CONV_K - 1, :]
+        return out, {"conv": tail, "state": state_f}
+
+
+def mamba2_decode(p: Params, x: jax.Array, cache: Params
+                  ) -> Tuple[jax.Array, Params]:
+    """One-token step.  x: (B, 1, d); cache: {"conv": (B, K-1, d_inner),
+    "state": (B, H, P, N)}.  O(1) in sequence length."""
+    with jax.named_scope("ssm"):
+        B_ = x.shape[0]
+        d_inner = p["wx"].shape[-1]
+        H = d_inner // HEAD_P
+        z = jnp.einsum("bsd,de->bse", x, p["wz"])[:, 0]
+        xb = jnp.einsum("bsd,de->bse", x, p["wx"])[:, 0]       # (B, d_inner)
+        window = jnp.concatenate([cache["conv"], xb[:, None, :]], axis=1)
+        conv_out = jnp.einsum("bke,ke->be", window, p["conv"].astype(window.dtype))
+        xb = jax.nn.silu(conv_out)
+        Bt = jnp.einsum("bsd,dn->bsn", x, p["wB"])[:, 0]
+        Ct = jnp.einsum("bsd,dn->bsn", x, p["wC"])[:, 0]
+        dt = jax.nn.softplus(
+            jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)[:, 0]
+            + p["dt_bias"])                                    # (B,H)
+        A = -jnp.exp(p["A_log"])
+        a = jnp.exp(dt * A).astype(cache["state"].dtype)       # (B,H)
+        X = xb.reshape(B_, H, HEAD_P)
+        Xe = X * dt[..., None].astype(X.dtype)
+        state = cache["state"] * a[:, :, None, None] \
+            + jnp.einsum("bn,bhp->bhpn", Bt, Xe)
+        y = jnp.einsum("bn,bhpn->bhp", Ct, state) \
+            + X * p["D"][None, :, None].astype(X.dtype)
+        y = y.reshape(B_, d_inner)
+        y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+        out = jnp.einsum("be,ed->bd", y, p["w_out"])[:, None, :]
+        return out, {"conv": window[:, 1:], "state": state}
+
+
+def mamba2_cache_spec(batch: int, d: int, d_state: int, dtype, *,
+                      expand: int = 2) -> Params:
+    from .paramdecl import SpecLeaf
+    d_inner = expand * d
+    H = d_inner // HEAD_P
+    return {
+        "conv": SpecLeaf((batch, CONV_K - 1, d_inner), jnp.dtype(dtype),
+                         ("batch", None, "heads")),
+        "state": SpecLeaf((batch, H, HEAD_P, d_state), jnp.dtype(dtype),
+                          ("batch", "heads", None, None)),
+    }

@@ -1,0 +1,7 @@
+from .adamw import AdamW, adamw, global_norm
+from .schedules import constant, warmup_cosine
+from .dgc import dgc_compress, dgc_decompress, DGCState, dgc_init, dgc_step
+
+__all__ = ["AdamW", "adamw", "global_norm", "constant", "warmup_cosine",
+           "dgc_compress", "dgc_decompress", "DGCState", "dgc_init",
+           "dgc_step"]

@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure functions of the step count)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda count: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / max(warmup_steps, 1)
+        prog = jnp.clip((c - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(c < warmup_steps, warm, cos)
+    return fn

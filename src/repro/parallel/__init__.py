@@ -1,0 +1,3 @@
+from .pipeline import gpipe_spmd, pipeline_graph, gpipe_bubble_fraction
+
+__all__ = ["gpipe_spmd", "pipeline_graph", "gpipe_bubble_fraction"]

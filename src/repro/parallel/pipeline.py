@@ -1,0 +1,108 @@
+"""Pipeline parallelism: GPipe schedule over a mesh axis + its Daydream model.
+
+Two pieces:
+
+* :func:`gpipe_spmd` — a real SPMD GPipe wavefront, written for
+  ``shard_map`` over a ``stage`` mesh axis (the multi-pod layout's ``pod``
+  axis is the natural stage axis: cross-pod links are the slowest, and PP
+  crosses them once per microbatch instead of every layer).  Stage s runs
+  microbatch m at wavefront step t = s + m; activations hop stages with
+  ``ppermute``.
+
+* :func:`pipeline_graph` — the same schedule as a Daydream dependency graph
+  (one lane per stage, cross-stage edges), so the simulator predicts the
+  bubble fraction before anyone commits to a stage split.  The classic
+  closed form for balanced stages — makespan = (M + S - 1) * t_stage — is
+  asserted against the simulator in tests/test_pipeline.py, a nice
+  independent validation of paper Algorithm 1 on a known schedule.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import DependencyGraph
+from repro.core.task import Task, TaskKind
+
+
+# ------------------------------------------------------------- SPMD GPipe
+def gpipe_spmd(stage_fn: Callable[[jax.Array], jax.Array],
+               x_microbatches: jax.Array, *, n_microbatches: int,
+               axis_name: str = "stage") -> jax.Array:
+    """Run a GPipe wavefront inside ``shard_map`` over ``axis_name``.
+
+    ``stage_fn`` is this device's stage (parameters closed over, already
+    stage-sharded).  ``x_microbatches``: (M, mb, ...) — read by stage 0;
+    other stages receive activations via ppermute.  Returns (M, mb, ...)
+    outputs as produced by the LAST stage (valid on every device for
+    simplicity; callers slice).
+    """
+    S = jax.lax.psum(1, axis_name)
+    sid = jax.lax.axis_index(axis_name)
+    M = n_microbatches
+    mb_shape = x_microbatches.shape[1:]
+    perm = [(i, i + 1) for i in range(S - 1)]
+
+    def step(carry, t):
+        buf_in, outputs = carry
+        m = t - sid                                # this stage's microbatch
+        active = (m >= 0) & (m < M)
+        fresh = x_microbatches[jnp.clip(t, 0, M - 1)]
+        inp = jnp.where(sid == 0, fresh, buf_in)
+        out = stage_fn(inp)
+        out = jnp.where(active, out, jnp.zeros_like(out))
+        # the last stage emits a finished microbatch at row m
+        is_last = sid == S - 1
+        row = jnp.clip(m, 0, M - 1)
+        emitted = jnp.where(active & is_last, out, outputs[row])
+        outputs = jax.lax.dynamic_update_slice_in_dim(
+            outputs, emitted[None], row, axis=0)
+        nxt = jax.lax.ppermute(out, axis_name, perm)
+        return (nxt, outputs), None
+
+    buf0 = jnp.zeros(mb_shape, x_microbatches.dtype)
+    out0 = jnp.zeros((M,) + mb_shape, x_microbatches.dtype)
+    # scan carries diverge per stage: mark them varying over the mesh axis
+    if hasattr(jax.lax, "pvary"):
+        buf0 = jax.lax.pvary(buf0, (axis_name,))
+        out0 = jax.lax.pvary(out0, (axis_name,))
+    (_, outputs), _ = jax.lax.scan(step, (buf0, out0),
+                                   jnp.arange(M + S - 1))
+    # broadcast the last stage's outputs to every device so callers can
+    # read them uniformly (psum of one-hot contribution)
+    contrib = jnp.where(sid == S - 1, outputs, jnp.zeros_like(outputs))
+    return jax.lax.psum(contrib, axis_name)
+
+
+# --------------------------------------------------------- Daydream model
+def pipeline_graph(stage_times_s: Sequence[float], n_microbatches: int,
+                   hop_time_s: float = 0.0) -> DependencyGraph:
+    """GPipe schedule as a Daydream graph: lanes = stages, edges = deps.
+
+    Task (s, m) depends on (s-1, m) [activation arrival] and its own lane's
+    program order handles (s, m-1).  ``hop_time_s`` models the ppermute as
+    the producing task's trailing gap.
+    """
+    g = DependencyGraph()
+    tasks: Dict[tuple, Task] = {}
+    for m in range(n_microbatches):
+        for s, dt in enumerate(stage_times_s):
+            t = Task(name=f"stage{s}/mb{m}", kind=TaskKind.COMPUTE,
+                     thread=f"stage{s}", duration=float(dt),
+                     gap=float(hop_time_s), layer=f"stage{s}", phase="fwd")
+            g.add_task(t)
+            tasks[(s, m)] = t
+            if s > 0:
+                g.add_edge(tasks[(s - 1, m)], t)
+    return g
+
+
+def gpipe_bubble_fraction(stage_times_s: Sequence[float],
+                          n_microbatches: int) -> float:
+    """Analytic GPipe bubble for balanced stages: (S-1) / (M + S - 1)."""
+    S = len(stage_times_s)
+    M = n_microbatches
+    return (S - 1) / (M + S - 1)

@@ -1,0 +1,5 @@
+from .fault import (FaultTolerantRunner, Heartbeat, StragglerMonitor,
+                    RetryPolicy)
+
+__all__ = ["FaultTolerantRunner", "Heartbeat", "StragglerMonitor",
+           "RetryPolicy"]

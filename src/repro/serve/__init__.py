@@ -1,0 +1,3 @@
+from .engine import ServeEngine, Request, Result
+
+__all__ = ["ServeEngine", "Request", "Result"]

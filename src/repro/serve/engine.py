@@ -1,0 +1,86 @@
+"""Batched serving engine: prefill + decode over a shared KV cache.
+
+A deliberately small but real engine: fixed-size batch slots, greedy decode,
+per-request max-token budgets, and cache reuse across the decode loop (the
+decode step is the same jitted ``serve_step`` the dry-run lowers at the
+decode_32k / long_500k cells).  Requests shorter than the batch's prompt
+length are left-padded; finished slots keep decoding into a scratch token
+(classic static-batch serving) until the whole batch drains.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import (ModelConfig, build_model, make_prefill_step,
+                                make_serve_step)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+
+
+@dataclasses.dataclass
+class Result:
+    tokens: List[int]              # generated continuation (greedy)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_seq: int = 256) -> None:
+        if cfg.family in ("vlm", "encdec"):
+            raise NotImplementedError(
+                "engine demo drives token-only families; vlm/encdec prefill "
+                "requires frontend embeddings via model.prefill directly")
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.model = build_model(cfg)
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(make_serve_step(cfg))
+
+    def generate(self, requests: List[Request]) -> List[Result]:
+        B = len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, plen - len(r.prompt):] = r.prompt     # left-pad
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        # grow cache to max_seq for attention families (prefill cache is plen)
+        cache = self._grow_cache(cache, plen)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        budget = max(r.max_new_tokens for r in requests)
+        out = [nxt]
+        pos = plen
+        for _ in range(min(budget - 1, self.max_seq - plen - 1)):
+            nxt, cache = self._decode(self.params, cache, nxt,
+                                      jnp.asarray(pos, jnp.int32))
+            out.append(nxt)
+            pos += 1
+        gen = np.concatenate([np.asarray(t) for t in out], axis=1)
+        return [Result(tokens=list(gen[i, :requests[i].max_new_tokens]))
+                for i in range(B)]
+
+    def _grow_cache(self, cache, plen: int):
+        """Pad seq-dim KV caches from prefill length to max_seq."""
+        target = self.max_seq
+
+        def grow(x):
+            if x.ndim == 4 and x.shape[1] == plen and plen < target and \
+                    not self.cfg.window:
+                pad = [(0, 0)] * x.ndim
+                pad[1] = (0, target - plen)
+                return jnp.pad(x, pad)
+            if x.ndim == 3 and x.shape[1] == plen and plen < target and \
+                    self.cfg.family == "mla_moe":
+                pad = [(0, 0)] * x.ndim
+                pad[1] = (0, target - plen)
+                return jnp.pad(x, pad)
+            return x
+        return jax.tree.map(grow, cache)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# src layout import without install; tests must see ONE cpu device (the
+# 512-device forcing lives only inside launch/dryrun.py subprocesses).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,112 @@
+"""Dependency-graph construction invariants (paper §4.2) + property tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import (DependencyGraph, GraphError, Task, TaskKind,
+                        DEVICE_STREAM, HOST_THREAD)
+
+
+def mk(name="t", thread=DEVICE_STREAM, dur=1.0, **kw):
+    return Task(name=name, kind=kw.pop("kind", TaskKind.COMPUTE),
+                thread=thread, duration=dur, **kw)
+
+
+def chain(g, n, thread=DEVICE_STREAM):
+    return [g.add_task(mk(f"{thread}{i}", thread)) for i in range(n)]
+
+
+class TestBasics:
+    def test_lane_program_order(self):
+        g = DependencyGraph()
+        ts = chain(g, 4)
+        for a, b in zip(ts, ts[1:]):
+            assert b in g.children(a)
+        g.validate()
+
+    def test_insert_after_splices(self):
+        g = DependencyGraph()
+        a, b = chain(g, 2)
+        c = g.add_task(mk("c"), after=a)
+        assert c in g.children(a) and b in g.children(c)
+        assert b not in g.children(a)
+        g.validate()
+
+    def test_remove_bridges(self):
+        g = DependencyGraph()
+        a, b, c = chain(g, 3)
+        g.remove_task(b)
+        assert c in g.children(a)
+        g.validate()
+
+    def test_remove_no_bridge(self):
+        g = DependencyGraph()
+        a, b, c = chain(g, 3)
+        g.remove_task(b, bridge=False)
+        assert c not in g.children(a)
+
+    def test_cross_thread_edge_and_cycle_detection(self):
+        g = DependencyGraph()
+        h = g.add_task(mk("h", HOST_THREAD))
+        d = g.add_task(mk("d"))
+        g.add_edge(h, d)
+        g.validate()
+        g.add_edge(d, h)
+        with pytest.raises(GraphError):
+            g.validate()
+
+    def test_copy_independent(self):
+        g = DependencyGraph()
+        chain(g, 3)
+        g2 = g.copy()
+        g2.remove_task(g2.tasks()[0])
+        assert len(g) == 3 and len(g2) == 2
+
+    def test_critical_path_includes_gap(self):
+        g = DependencyGraph()
+        a = g.add_task(mk("a", dur=1.0, gap=0.5))
+        b = g.add_task(mk("b", dur=2.0))
+        assert g.critical_path() == pytest.approx(3.5)
+
+    def test_select(self):
+        g = DependencyGraph()
+        chain(g, 3)
+        chain(g, 2, HOST_THREAD)
+        assert len(g.select(lambda t: t.thread == HOST_THREAD)) == 2
+
+
+@st.composite
+def random_graph(draw):
+    g = DependencyGraph()
+    n_dev = draw(st.integers(1, 12))
+    n_host = draw(st.integers(0, 6))
+    dev = chain(g, n_dev)
+    host = chain(g, n_host, HOST_THREAD)
+    # random forward (acyclic) cross-edges host -> device
+    for h_i in range(n_host):
+        for d_i in range(n_dev):
+            if draw(st.booleans()):
+                g.add_edge(host[h_i], dev[d_i])
+    return g
+
+
+class TestProperties:
+    @hypothesis.given(random_graph())
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_random_graphs_valid(self, g):
+        g.validate()
+        assert g.critical_path() <= g.total_work() + 1e-9
+
+    @hypothesis.given(random_graph(), st.integers(0, 5))
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_remove_preserves_acyclicity(self, g, idx):
+        ts = g.tasks()
+        g.remove_task(ts[idx % len(ts)])
+        g.validate()
+
+    @hypothesis.given(random_graph())
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_copy_roundtrip_stats(self, g):
+        s1, s2 = g.stats(), g.copy().stats()
+        assert s1 == s2

@@ -1,0 +1,92 @@
+"""Daydream Algorithm 1 simulation semantics."""
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import (DependencyGraph, Task, TaskKind, simulate,
+                        make_priority_schedule, DEVICE_STREAM, HOST_THREAD,
+                        ici_channel)
+
+
+def mk(name, thread=DEVICE_STREAM, dur=1.0, gap=0.0, **kw):
+    return Task(name=name, kind=kw.pop("kind", TaskKind.COMPUTE),
+                thread=thread, duration=dur, gap=gap, **kw)
+
+
+def test_serial_lane():
+    g = DependencyGraph()
+    for i in range(3):
+        g.add_task(mk(f"t{i}", dur=2.0))
+    assert simulate(g).makespan == pytest.approx(6.0)
+
+
+def test_gap_advances_thread_progress():
+    """Paper §4.2.1 'Gap': untraced host time occupies the thread."""
+    g = DependencyGraph()
+    g.add_task(mk("a", HOST_THREAD, dur=1.0, gap=3.0))
+    g.add_task(mk("b", HOST_THREAD, dur=1.0))
+    r = simulate(g)
+    assert r.start[g.tasks()[1].uid] == pytest.approx(4.0)
+    assert r.makespan == pytest.approx(5.0)
+
+
+def test_parallel_threads_overlap():
+    g = DependencyGraph()
+    g.add_task(mk("d", DEVICE_STREAM, dur=5.0))
+    g.add_task(mk("h", HOST_THREAD, dur=3.0))
+    r = simulate(g)
+    assert r.makespan == pytest.approx(5.0)
+    assert r.breakdown["parallel_s"] == pytest.approx(3.0)
+    assert r.breakdown["device_only_s"] == pytest.approx(2.0)
+
+
+def test_dependency_delays_start():
+    g = DependencyGraph()
+    h = g.add_task(mk("h", HOST_THREAD, dur=2.0))
+    d = g.add_task(mk("d", DEVICE_STREAM, dur=1.0))
+    g.add_edge(h, d)
+    r = simulate(g)
+    assert r.start[d.uid] == pytest.approx(2.0)
+
+
+def test_priority_schedule_reorders():
+    """P3-style: among ready tasks on one channel, highest priority first."""
+    g = DependencyGraph()
+    lo = g.add_task(mk("lo", ici_channel("send"), dur=4.0,
+                       attrs={"priority": 0}), link_lane=False)
+    hi = g.add_task(mk("hi", ici_channel("send"), dur=1.0,
+                       attrs={"priority": 9}), link_lane=False)
+    sched = make_priority_schedule(lambda t: t.attrs.get("priority", -1))
+    r = simulate(g, sched)
+    assert r.start[hi.uid] < r.start[lo.uid]
+
+
+def test_makespan_at_least_critical_path():
+    g = DependencyGraph()
+    a = g.add_task(mk("a", dur=1.0))
+    b = g.add_task(mk("b", HOST_THREAD, dur=2.0))
+    g.add_edge(a, b)
+    r = simulate(g)
+    assert r.makespan >= g.critical_path() - 1e-9
+
+
+@hypothesis.given(st.lists(st.tuples(st.sampled_from(["device", "host",
+                                                      "ici:x"]),
+                                     st.floats(0.01, 5.0),
+                                     st.floats(0.0, 1.0)),
+                           min_size=1, max_size=30))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_property_bounds(items):
+    """critical path <= makespan <= total work, executed == all tasks."""
+    g = DependencyGraph()
+    prev = None
+    for i, (th, dur, gap) in enumerate(items):
+        t = g.add_task(mk(f"t{i}", th, dur=dur, gap=gap))
+        if prev is not None and i % 3 == 0:
+            g.add_edge(prev, t)
+        prev = t
+    r = simulate(g)
+    assert len(r.start) == len(g)
+    assert r.makespan >= g.critical_path() - 1e-6
+    assert r.makespan <= g.total_work() + 1e-6

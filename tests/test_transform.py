@@ -1,0 +1,75 @@
+"""Graph-transformation primitives (paper §4.4)."""
+
+import pytest
+
+from repro.core import (DependencyGraph, GraphTransform, Task, TaskKind,
+                        simulate, by_name, by_kind, by_layer, all_of,
+                        on_device, predicted_speedup, DEVICE_STREAM,
+                        HOST_THREAD)
+
+
+def mk(name, thread=DEVICE_STREAM, dur=1.0, **kw):
+    return Task(name=name, kind=kw.pop("kind", TaskKind.COMPUTE),
+                thread=thread, duration=dur, **kw)
+
+
+@pytest.fixture
+def g():
+    g = DependencyGraph()
+    g.add_task(mk("dot.1", dur=3.0, layer="l0/attn"))
+    g.add_task(mk("elementwise.1", dur=1.0, layer="l0/norm"))
+    g.add_task(mk("dot.2", dur=3.0, layer="l1/attn"))
+    g.add_task(mk("host", HOST_THREAD, dur=0.5))
+    return g
+
+
+def test_copy_semantics(g):
+    tf = GraphTransform(g)
+    tf.scale(by_name("dot"), 0.5)
+    assert sum(t.duration for t in g.tasks()) == pytest.approx(7.5)
+    assert sum(t.duration for t in tf.graph.tasks()) == pytest.approx(4.5)
+
+
+def test_shrink_is_paper_semantics(g):
+    tf = GraphTransform(g)
+    n = tf.shrink(by_name("dot"), 3.0)            # "3x faster"
+    assert n == 2
+    assert all(t.duration == pytest.approx(1.0)
+               for t in tf.select(by_name("dot")))
+
+
+def test_select_by_layer(g):
+    tf = GraphTransform(g)
+    assert len(tf.select(by_layer(r"l0/"))) == 2
+    assert len(tf.select(all_of(on_device, by_layer("attn")))) == 2
+
+
+def test_insert_remove_keep_simulatable(g):
+    tf = GraphTransform(g)
+    anchor = tf.select(by_name("dot.1"))[0]
+    tf.insert_after(anchor, mk("injected", dur=2.0))
+    r1 = tf.simulate()
+    tf.remove(by_name("injected"))
+    r2 = tf.simulate()
+    assert r1.makespan == pytest.approx(r2.makespan + 2.0)
+    tf.graph.validate()
+
+
+def test_insert_before_head(g):
+    tf = GraphTransform(g)
+    head = tf.graph.lane_tasks(DEVICE_STREAM)[0]
+    tf.insert_before(head, mk("pre", dur=1.0))
+    lane = tf.graph.lane_tasks(DEVICE_STREAM)
+    assert lane[0].name == "pre"
+    tf.graph.validate()
+
+
+def test_predicted_speedup_direction(g):
+    s = predicted_speedup(g, lambda tf: tf.shrink(by_name("dot"), 2.0))
+    assert s > 1.0
+
+
+def test_set_duration(g):
+    tf = GraphTransform(g)
+    tf.set_duration(by_name("host"), 0.0)
+    assert tf.select(by_name("host"))[0].duration == 0.0
