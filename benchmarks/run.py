@@ -19,6 +19,7 @@ BENCHES = {
     "fig10_p3": "benchmarks.bench_p3",
     "table1_coverage": "benchmarks.bench_coverage",
     "roofline": "benchmarks.bench_roofline",
+    "sim_engine": "benchmarks.bench_sim",
 }
 
 

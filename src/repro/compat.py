@@ -1,0 +1,75 @@
+"""jax version compatibility shims.
+
+The repo targets the modern jax mesh API (``jax.make_mesh(axis_types=...)``,
+``jax.set_mesh``, ``jax.shard_map``, dict-returning ``cost_analysis``); the
+container pins jax 0.4.x where those are absent or shaped differently.  All
+call sites route through this module so the code runs on both:
+
+* :func:`make_mesh` — forwards ``axis_types`` only when the installed jax
+  understands it (0.4.x meshes are implicitly Auto, so dropping it is
+  semantically equivalent).
+* :func:`set_mesh` — ``jax.set_mesh`` when present, else the ``Mesh``
+  object's own context manager (which installs the resource env that
+  ``shard_map`` / sharding propagation read in 0.4.x).
+* :func:`shard_map` — ``jax.shard_map`` or the experimental import.
+* :func:`cost_analysis_dict` — XLA cost analysis as one flat dict (0.4.x
+  returns a list with one dict per program).
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+
+_MAKE_MESH_HAS_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def axis_type_auto() -> Optional[Any]:
+    """``jax.sharding.AxisType.Auto`` on new jax, None (implicit) on 0.4.x."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return getattr(at, "Auto", None)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, devices=None) -> "jax.sharding.Mesh":
+    """``jax.make_mesh`` with every axis typed Auto where supported."""
+    kw: Dict[str, Any] = {}
+    if devices is not None:
+        kw["devices"] = devices
+    auto = axis_type_auto()
+    if _MAKE_MESH_HAS_AXIS_TYPES and auto is not None:
+        kw["axis_types"] = (auto,) * len(tuple(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # Mesh is its own context manager on 0.4.x
+
+
+def shard_map(*args, **kwargs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(*args, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(*args, **kwargs)
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` to a flat dict (or {})."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    try:
+        return dict(ca)
+    except Exception:
+        return {}

@@ -6,13 +6,24 @@ Public surface:
     from repro.core import (
         Task, TaskKind, DependencyGraph, simulate, GraphTransform,
         trace_compiled, trace_measured, CostModel, whatif,
+        ClusterGraph, WorkerSpec,          # N-worker global-graph simulation
     )
+
+Simulation engines: :func:`simulate` is the O(E log V) event-driven heap
+engine; :func:`simulate_reference` keeps the paper's Algorithm 1 frontier
+scan as the equivalence oracle.  :class:`ClusterGraph` replicates a profiled
+single-worker graph across N (possibly heterogeneous) workers with
+cross-worker collective edges (ring / hierarchical / fused) and returns a
+per-worker :class:`SimResult` breakdown — see :mod:`repro.core.cluster`.
 """
 
 from .task import (Task, TaskKind, HardwareSpec, TPU_V5E, HOST_THREAD,
-                   DEVICE_STREAM, DATA_THREAD, DMA_CHANNEL, ici_channel)
+                   DEVICE_STREAM, DATA_THREAD, DMA_CHANNEL, ici_channel,
+                   worker_thread, split_worker_thread)
 from .graph import DependencyGraph, GraphError
-from .simulate import simulate, SimResult, default_schedule, make_priority_schedule
+from .simulate import (simulate, simulate_reference, SimResult,
+                       default_schedule, make_priority_schedule)
+from .cluster import ClusterGraph, ClusterResult, WorkerSpec
 from .transform import (GraphTransform, predicted_speedup, by_kind, by_name,
                         by_layer, by_phase, on_device, all_of, any_of)
 from .costmodel import CostModel, CollectiveModel, MeshTopology
@@ -25,8 +36,11 @@ from . import whatif
 __all__ = [
     "Task", "TaskKind", "HardwareSpec", "TPU_V5E",
     "HOST_THREAD", "DEVICE_STREAM", "DATA_THREAD", "DMA_CHANNEL", "ici_channel",
+    "worker_thread", "split_worker_thread",
     "DependencyGraph", "GraphError",
-    "simulate", "SimResult", "default_schedule", "make_priority_schedule",
+    "simulate", "simulate_reference", "SimResult",
+    "default_schedule", "make_priority_schedule",
+    "ClusterGraph", "ClusterResult", "WorkerSpec",
     "GraphTransform", "predicted_speedup",
     "by_kind", "by_name", "by_layer", "by_phase", "on_device", "all_of", "any_of",
     "CostModel", "CollectiveModel", "MeshTopology",

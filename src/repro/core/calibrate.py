@@ -71,8 +71,8 @@ def measure_collective_bandwidth(num_devices: Optional[int] = None,
     if n < 2:
         return 8e9
     from jax.sharding import PartitionSpec as P, NamedSharding
-    mesh = jax.make_mesh((n,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro import compat
+    mesh = compat.make_mesh((n,), ("d",))
     elems = payload_mb * 1024 * 1024 // 4
     x = jnp.ones((n, elems), jnp.float32)
     x = jax.device_put(x, NamedSharding(mesh, P("d", None)))

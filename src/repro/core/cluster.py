@@ -1,0 +1,406 @@
+"""Cluster simulation: a global dependency graph spanning N workers.
+
+Daydream (the paper) predicts distributed training by splicing analytical
+collective-cost tasks into *one* worker's graph (``what_if_distributed``).
+That collapses every worker onto one timeline, so per-worker questions —
+"what if worker 3 is 2x slower?", "what if half the ring crosses a pod
+boundary?", "what does a mixed v5e/v4 fleet look like?" — are unanswerable.
+dPRO (arXiv:2205.02473) showed the fix: build a *global* graph whose nodes
+are every worker's tasks and whose cross-worker edges encode collective
+synchronization, then simulate it once.
+
+:class:`ClusterGraph` does exactly that:
+
+* :meth:`ClusterGraph.build` replicates a profiled single-worker
+  :class:`~repro.core.graph.DependencyGraph` across N (possibly
+  heterogeneous) :class:`WorkerSpec` replicas.  Replica ``i``'s resources are
+  namespaced ``w<i>/<thread>`` (:func:`~repro.core.task.worker_thread`);
+  non-collective durations and gaps scale by ``compute_scale`` (stragglers,
+  mixed device generations).
+
+* Collectives become cross-worker structures, mode-selectable:
+
+  - ``"ring"`` (default): each all-reduce is 2(n-1) per-worker *leg* tasks
+    (reduce-scatter legs then all-gather legs); leg k of worker i depends on
+    leg k-1 of ring predecessor i-1, which is what makes a straggler's delay
+    propagate around the ring exactly as the analytical model predicts.  Leg
+    time is (payload/n)/link_bw + hop latency; a link crossing pods uses DCN
+    bandwidth, and a slow worker's ``bandwidth_scale`` throttles its links.
+    With uniform workers, per-worker leg sums telescope to exactly
+    ``CollectiveModel.group_time`` — the single-graph DDP prediction.
+
+  - ``"hierarchical"`` (BlueConnect-style): intra-pod reduce-scatter, a
+    cross-pod all-reduce among pod leaders over DCN, intra-pod all-gather —
+    the decomposition of ``CollectiveModel.hierarchical_all_reduce``.
+
+  - ``"fused"``: one synchronized task per worker keeping the analytical
+    duration (a zero-cost barrier provides the "wait for all" semantics).
+
+  Point-to-point push/pull pairs (P3, parameter server) are synchronized at
+  the aggregation boundary: every worker's push feeds a barrier that gates
+  every worker's pull.
+
+* :meth:`ClusterGraph.simulate` runs the event-driven engine
+  (:func:`repro.core.simulate.simulate` — the O(E log V) heap engine makes
+  these N-times-larger graphs tractable) and splits the result into a
+  :class:`ClusterResult` with a per-worker :class:`SimResult` breakdown.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from .costmodel import CollectiveModel, CostModel
+from .graph import DependencyGraph, GraphError
+from .simulate import (ScheduleFn, SimResult, _host_device_breakdown,
+                       simulate)
+from .task import (Task, TaskKind, HOST_THREAD, split_worker_thread,
+                   worker_thread)
+
+# Ring-decomposable collectives -> number of leg rounds as a multiple of (n-1).
+_RING_ROUNDS = {"all-reduce": 2, "reduce-scatter": 1, "all-gather": 1}
+
+_SYNC_THREAD = "cluster/sync"
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerSpec:
+    """One worker (chip/replica) in the cluster.
+
+    ``compute_scale`` multiplies every non-collective duration and gap of the
+    replica (2.0 == a 2x-slower straggler or an older device generation).
+    ``bandwidth_scale`` scales the bandwidth of links adjacent to this worker
+    (0.5 == a worker behind a congested/slow NIC).  ``pod`` groups workers
+    into pods: ring links between different pods travel over DCN instead of
+    ICI, and the hierarchical mode builds its two-level decomposition from it.
+    """
+
+    compute_scale: float = 1.0
+    bandwidth_scale: float = 1.0
+    pod: int = 0
+
+
+def _as_specs(workers: Union[int, Sequence[WorkerSpec]]) -> List[WorkerSpec]:
+    if isinstance(workers, int):
+        if workers < 1:
+            raise GraphError(f"cluster needs >= 1 worker, got {workers}")
+        return [WorkerSpec() for _ in range(workers)]
+    specs = list(workers)
+    if not specs:
+        raise GraphError("cluster needs >= 1 worker")
+    return specs
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    """Global simulation outcome plus the per-worker breakdown."""
+
+    makespan: float
+    global_result: SimResult
+    per_worker: Dict[int, SimResult]
+    workers: List[WorkerSpec]
+
+    def speedup_over(self, other: "ClusterResult") -> float:
+        return (other.makespan / self.makespan
+                if self.makespan > 0 else float("inf"))
+
+    def straggler(self) -> int:
+        """Worker index with the largest local makespan."""
+        return max(self.per_worker, key=lambda i: self.per_worker[i].makespan)
+
+    def worker_makespans(self) -> List[float]:
+        return [self.per_worker[i].makespan for i in sorted(self.per_worker)]
+
+
+class ClusterGraph:
+    """A global N-worker dependency graph built from a single-worker profile."""
+
+    def __init__(self, graph: DependencyGraph, workers: List[WorkerSpec],
+                 cost: CostModel, schedule: Optional[ScheduleFn] = None) -> None:
+        self.graph = graph
+        self.workers = workers
+        self.cost = cost
+        self.schedule = schedule
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(cls, base: DependencyGraph,
+              workers: Union[int, Sequence[WorkerSpec]],
+              *, cost: Optional[CostModel] = None,
+              collective_mode: str = "ring",
+              schedule: Optional[ScheduleFn] = None) -> "ClusterGraph":
+        """Replicate ``base`` across ``workers`` and link the collectives.
+
+        ``base`` is a single-worker graph whose collective tasks (typically
+        inserted by :func:`repro.core.whatif.what_if_distributed` /
+        ``what_if_zero``) carry ``attrs["collective"]``; each such task is
+        replaced, per replica, by the cross-worker structure selected by
+        ``collective_mode`` ("ring" | "hierarchical" | "fused").
+        """
+        if collective_mode not in ("ring", "hierarchical", "fused"):
+            raise GraphError(f"unknown collective_mode {collective_mode!r}")
+        specs = _as_specs(workers)
+        cost = cost or CostModel()
+        n = len(specs)
+        g = DependencyGraph()
+        base_tasks = base.tasks()
+
+        # 1. replicate: clone every task per worker, scale compute durations.
+        replicas: List[Dict[int, Task]] = []
+        for i, spec in enumerate(specs):
+            remap: Dict[int, Task] = {}
+            for thread, lane in base.lanes.items():
+                for uid in lane:
+                    t = base.get(uid)
+                    nt = t.clone()
+                    nt.thread = worker_thread(i, t.thread)
+                    if t.kind == TaskKind.COLLECTIVE:
+                        nt.duration = t.duration / max(spec.bandwidth_scale,
+                                                       1e-12)
+                    else:
+                        nt.duration = t.duration * spec.compute_scale
+                        nt.gap = t.gap * spec.compute_scale
+                    g.add_task(nt, link_lane=False)
+                    remap[uid] = nt
+            for t in base_tasks:
+                for c in base.children(t):
+                    g.add_edge(remap[t.uid], remap[c.uid])
+            replicas.append(remap)
+
+        cg = cls(g, specs, cost, schedule)
+        if n > 1:
+            cg._link_collectives(base, replicas, collective_mode)
+            cg._link_push_pull(base, replicas)
+        g.validate()
+        return cg
+
+    # ------------------------------------------------------- collective wiring
+    def _link_bandwidth(self, i: int, j: int) -> float:
+        """Bandwidth of the ring link worker i -> worker j."""
+        wi, wj = self.workers[i], self.workers[j]
+        hw = self.cost.hw
+        if wi.pod != wj.pod:
+            bw = hw.dcn_bandwidth
+        else:
+            bw = hw.ici_bandwidth * hw.ici_links_per_axis
+        # floor like every other scale use: a 0.0 scale (dead NIC) models as
+        # an astronomically slow link rather than a ZeroDivisionError
+        return bw * max(min(wi.bandwidth_scale, wj.bandwidth_scale), 1e-12)
+
+    def _detach(self, task: Task) -> Tuple[List[Task], List[Task]]:
+        """Remove ``task`` keeping (parents, children) for re-wiring."""
+        parents = self.graph.parents(task)
+        children = self.graph.children(task)
+        self.graph.remove_task(task, bridge=False)
+        return parents, children
+
+    def _barrier(self, name: str) -> Task:
+        return self.graph.add_task(
+            Task(name=name, kind=TaskKind.SYNC, thread=_SYNC_THREAD,
+                 duration=0.0, phase="comm"), link_lane=False)
+
+    def _link_collectives(self, base: DependencyGraph,
+                          replicas: List[Dict[int, Task]], mode: str) -> None:
+        linkable = [t for t in base.tasks()
+                    if t.kind == TaskKind.COLLECTIVE
+                    and t.attrs.get("collective")]
+        for c in linkable:
+            op = c.attrs.get("collective")
+            if mode == "hierarchical" and op == "all-reduce":
+                # BlueConnect decomposition is an all-reduce rewrite; a bare
+                # reduce-scatter / all-gather is already single-stage and
+                # keeps its ring legs
+                self._hierarchical_decompose(c, replicas)
+            elif mode in ("ring", "hierarchical") and op in _RING_ROUNDS:
+                self._ring_decompose(c, replicas)
+            else:
+                self._fused_sync(c, replicas)
+
+    def _ring_decompose(self, c: Task, replicas: List[Dict[int, Task]]) -> None:
+        """Per-worker ring legs with cross-worker pipeline edges.
+
+        Leg round k of worker i waits on round k-1 of worker i-1 (the chunk it
+        is about to forward) and on its own round k-1 (channel serialization).
+        Per-worker totals telescope to ``group_time`` for uniform workers.
+        """
+        n = len(replicas)
+        rounds = _RING_ROUNDS[c.attrs["collective"]] * (n - 1)
+        payload = max(c.comm_bytes, 0.0)
+        hop = CollectiveModel.HOP_LATENCY
+        legs: List[List[Task]] = []
+        for i, remap in enumerate(replicas):
+            rc = remap[c.uid]
+            parents, children = self._detach(rc)
+            leg_dur = (payload / n) / self._link_bandwidth(i, (i + 1) % n) + hop
+            worker_legs: List[Task] = []
+            prev: Optional[Task] = None
+            for k in range(rounds):
+                leg = rc.clone()
+                leg.name = f"{c.name}:leg{k}"
+                leg.duration = leg_dur
+                leg.comm_bytes = payload / n
+                leg.attrs = dict(c.attrs, ring_round=k)
+                self.graph.add_task(leg, link_lane=False)
+                for p in (parents if prev is None else [prev]):
+                    self.graph.add_edge(p, leg)
+                prev = leg
+                worker_legs.append(leg)
+            for ch in children:
+                self.graph.add_edge(prev, ch)
+            legs.append(worker_legs)
+        for i in range(n):
+            for k in range(1, rounds):
+                self.graph.add_edge(legs[(i - 1) % n][k - 1], legs[i][k])
+
+    def _hierarchical_decompose(self, c: Task,
+                                replicas: List[Dict[int, Task]]) -> None:
+        """BlueConnect-style: pod-local reduce-scatter, cross-pod all-reduce
+        among pod leaders over DCN, pod-local all-gather.
+
+        The cross-pod stage is itself a collective among leaders, so it is
+        gated on *every* pod's reduce-scatter finishing; the all-gather stage
+        is gated on every leader's cross-pod leg.  Total per-worker time for
+        uniform pods equals ``CollectiveModel.hierarchical_all_reduce``.
+        """
+        coll = CollectiveModel(self.cost.hw, self.cost.topo)
+        payload = max(c.comm_bytes, 0.0)
+        pods: Dict[int, List[int]] = collections.defaultdict(list)
+        for i, w in enumerate(self.workers):
+            pods[w.pod].append(i)
+        pod_ids = sorted(pods)
+        num_pods = len(pod_ids)
+
+        bounds = [self._detach(remap[c.uid]) for remap in replicas]
+
+        leaders_bar = self._barrier(f"{c.name}:leaders-barrier")
+        rs_of_pod: Dict[int, List[Task]] = {}
+        for p in pod_ids:
+            members = pods[p]
+            m = len(members)
+            scale = min(self.workers[i].bandwidth_scale for i in members)
+            rs_dur = coll.axis_time("reduce-scatter", payload, m, "ici")
+            rs_dur /= max(scale, 1e-12)
+            bar = self._barrier(f"{c.name}:pod{p}:rs-barrier")
+            rs_tasks = []
+            for i in members:
+                parents, _ = bounds[i]
+                for par in parents:
+                    self.graph.add_edge(par, bar)
+                rs = self._add_comm(i, c, f"pod{p}:reduce-scatter", rs_dur,
+                                    payload)
+                self.graph.add_edge(bar, rs)
+                rs_tasks.append(rs)
+            rs_of_pod[p] = rs_tasks
+            for rs in rs_tasks:
+                self.graph.add_edge(rs, leaders_bar)
+
+        if num_pods > 1:
+            gather_bar = self._barrier(f"{c.name}:gather-barrier")
+            for p in pod_ids:
+                members = pods[p]
+                leader = members[0]
+                shard = payload / max(len(members), 1)
+                cross_dur = coll.axis_time("all-reduce", shard, num_pods,
+                                           "dcn")
+                cross_dur /= max(self.workers[leader].bandwidth_scale, 1e-12)
+                cross = self._add_comm(leader, c, f"pod{p}:cross-all-reduce",
+                                       cross_dur, shard)
+                self.graph.add_edge(leaders_bar, cross)
+                self.graph.add_edge(cross, gather_bar)
+            gate = gather_bar
+        else:
+            gate = leaders_bar
+        for p in pod_ids:
+            self._pod_all_gather(c, coll, payload, p, pods[p], gate, bounds)
+
+    def _pod_all_gather(self, c: Task, coll: CollectiveModel, payload: float,
+                        p: int, members: List[int], gate: Task,
+                        bounds) -> None:
+        m = len(members)
+        scale = min(self.workers[i].bandwidth_scale for i in members)
+        ag_dur = coll.axis_time("all-gather", payload, m, "ici")
+        ag_dur /= max(scale, 1e-12)
+        for i in members:
+            ag = self._add_comm(i, c, f"pod{p}:all-gather", ag_dur, payload)
+            self.graph.add_edge(gate, ag)
+            _, children = bounds[i]
+            for ch in children:
+                self.graph.add_edge(ag, ch)
+
+    def _add_comm(self, i: int, c: Task, label: str, dur: float,
+                  nbytes: float) -> Task:
+        t = Task(name=f"{c.name}:{label}", kind=TaskKind.COLLECTIVE,
+                 thread=worker_thread(i, split_worker_thread(c.thread)[1]),
+                 duration=dur, comm_bytes=nbytes, phase="comm",
+                 attrs=dict(c.attrs, stage=label))
+        return self.graph.add_task(t, link_lane=False)
+
+    def _fused_sync(self, c: Task, replicas: List[Dict[int, Task]]) -> None:
+        """Keep one analytical-duration task per worker, gated by a barrier so
+        no worker's collective starts before every worker is ready."""
+        bar = self._barrier(f"{c.name}:barrier")
+        for remap in replicas:
+            rc = remap[c.uid]
+            for p in self.graph.parents(rc):
+                self.graph.add_edge(p, bar)
+            self.graph.add_edge(bar, rc)
+
+    def _link_push_pull(self, base: DependencyGraph,
+                        replicas: List[Dict[int, Task]]) -> None:
+        """Parameter-server semantics for P3-style push/pull pairs.
+
+        A pull returns the *aggregated* value, so every worker's pull of a
+        slice waits (via one barrier per push task) for every worker's push of
+        that slice.  Pushes themselves stay local — that preserves P3's
+        overlap of early pushes with the tail of backprop.
+        """
+        for u in base.tasks():
+            if u.kind != TaskKind.COLLECTIVE or u.attrs.get("collective"):
+                continue
+            pulls = [v for v in base.children(u)
+                     if v.kind == TaskKind.COLLECTIVE
+                     and not v.attrs.get("collective")]
+            if not pulls:
+                continue
+            bar = self._barrier(f"{u.name}:aggregate")
+            for remap in replicas:
+                self.graph.add_edge(remap[u.uid], bar)
+                for v in pulls:
+                    self.graph.add_edge(bar, remap[v.uid])
+
+    # -------------------------------------------------------------- simulate
+    def simulate(self, schedule: Optional[ScheduleFn] = None) -> ClusterResult:
+        res = simulate(self.graph, schedule or self.schedule)
+        per_worker = self._split_result(res)
+        return ClusterResult(makespan=res.makespan, global_result=res,
+                             per_worker=per_worker, workers=self.workers)
+
+    def _split_result(self, res: SimResult) -> Dict[int, SimResult]:
+        """Project the global result onto each worker's local resources."""
+        tasks_by_worker: Dict[int, List[Task]] = collections.defaultdict(list)
+        for t in self.graph.tasks():
+            w, _ = split_worker_thread(t.thread)
+            if w is not None:
+                tasks_by_worker[w].append(t)
+        out: Dict[int, SimResult] = {}
+        for i in range(len(self.workers)):
+            ts = tasks_by_worker.get(i, [])
+            start = {t.uid: res.start[t.uid] for t in ts}
+            finish = {t.uid: res.finish[t.uid] for t in ts}
+            busy: Dict[str, float] = collections.defaultdict(float)
+            intervals: Dict[str, List[Tuple[float, float]]] = \
+                collections.defaultdict(list)
+            makespan = 0.0
+            for t in ts:
+                local = split_worker_thread(t.thread)[1]
+                busy[local] += t.duration
+                if t.duration > 0:
+                    intervals[local].append((start[t.uid], finish[t.uid]))
+                makespan = max(makespan, finish[t.uid] + t.gap)
+            breakdown = _host_device_breakdown(
+                intervals, makespan, lambda th: th == HOST_THREAD)
+            out[i] = SimResult(makespan=makespan, start=start, finish=finish,
+                               thread_busy=dict(busy), breakdown=breakdown)
+        return out

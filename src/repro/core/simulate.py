@@ -1,17 +1,39 @@
-"""Daydream's runtime simulation — a faithful implementation of paper Algorithm 1.
+"""Daydream's runtime simulation — paper Algorithm 1, two engines.
 
-The simulator traverses the dependency graph, dispatching each frontier task to
-its execution thread and advancing per-thread progress including the task's
-trailing ``gap`` (the paper's mechanism for untraced host time).  The
-``schedule`` function that picks among ready tasks is pluggable exactly as in
-the paper (§4.4 "Schedule"): the default picks the task with the earliest
-effective start time; what-ifs like P3 override it with priority policies.
+:func:`simulate` is a heap-based *event-driven* engine: ready tasks live in a
+priority queue keyed by effective start time, so each scheduling decision is
+O(log V) instead of the naive frontier scan's O(F) (plus an O(F)
+``list.remove``).  Total cost is O(E log V) on lane-ordered graphs, which is
+what lets the cluster simulator (:mod:`repro.core.cluster`) run global graphs
+with hundreds of thousands of tasks.  :func:`simulate_reference` keeps the
+original O(V·F) frontier-scan loop verbatim as the equivalence oracle used by
+the property tests and the benchmark harness.
+
+Engine invariants (relied on by tests/test_engine_equivalence.py):
+
+* Effective start times are monotone: a task's ``max(thread progress,
+  dependency-ready time)`` only ever grows, so a heap entry's key is a valid
+  *lower bound* and stale entries can be lazily re-keyed on pop.
+* With the default policy, popping the minimum ``(eff, ready, uid)`` entry
+  reproduces :func:`default_schedule`'s tie-breaking exactly — both engines
+  produce bit-identical start times and makespans.
+* A pluggable :data:`ScheduleFn` must be *eff-minimal*: it returns a task
+  whose effective start is within ``SCHED_EPS`` of the frontier minimum.
+  Both built-ins (:func:`default_schedule`, :func:`make_priority_schedule`)
+  satisfy this; a policy that deliberately idles a resource should use
+  :func:`simulate_reference`, which passes the entire frontier.
+
+The ``schedule`` function that picks among ready tasks is pluggable exactly
+as in the paper (§4.4 "Schedule"): the default picks the task with the
+earliest effective start time; what-ifs like P3 override it with priority
+policies.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .graph import DependencyGraph
@@ -19,6 +41,10 @@ from .task import Task, TaskKind, DEVICE_STREAM, HOST_THREAD
 
 # schedule(frontier, progress, earliest_start) -> chosen task
 ScheduleFn = Callable[[List[Task], Dict[str, float], Dict[int, float]], Task]
+
+# Tie window inside which a custom schedule may reorder ready tasks; matches
+# make_priority_schedule's candidate filter so both engines see the same set.
+SCHED_EPS = 1e-12
 
 
 def default_schedule(frontier: List[Task], progress: Dict[str, float],
@@ -45,7 +71,7 @@ def make_priority_schedule(priority: Callable[[Task], float]) -> ScheduleFn:
         def eff(t: Task) -> float:
             return max(progress.get(t.thread, 0.0), earliest[t.uid])
         best_eff = min(eff(t) for t in frontier)
-        candidates = [t for t in frontier if eff(t) <= best_eff + 1e-12]
+        candidates = [t for t in frontier if eff(t) <= best_eff + SCHED_EPS]
         return max(candidates, key=lambda t: (priority(t), -t.uid))
     return sched
 
@@ -91,18 +117,133 @@ def _overlap(a: List[Tuple[float, float]], b: List[Tuple[float, float]]) -> floa
     return tot
 
 
+def _host_device_breakdown(busy_intervals: Dict[str, List[Tuple[float, float]]],
+                           makespan: float,
+                           is_host: Callable[[str], bool]) -> Dict[str, float]:
+    """Paper Fig. 6 runtime breakdown: host-only / device-only / parallel."""
+    host_iv = _interval_union(
+        [iv for th, ivs in busy_intervals.items() if is_host(th) for iv in ivs])
+    dev_iv = _interval_union(
+        [iv for th, ivs in busy_intervals.items() if not is_host(th) for iv in ivs])
+    host_busy = sum(e - s for s, e in host_iv)
+    dev_busy = sum(e - s for s, e in dev_iv)
+    par = _overlap(host_iv, dev_iv)
+    return {
+        "host_only_s": host_busy - par,
+        "device_only_s": dev_busy - par,
+        "parallel_s": par,
+        "idle_s": max(0.0, makespan - (host_busy + dev_busy - par)),
+    }
+
+
+def _assemble(graph: DependencyGraph, executed: int,
+              progress: Dict[str, float], start: Dict[int, float],
+              finish: Dict[int, float], busy: Dict[str, float],
+              busy_intervals: Dict[str, List[Tuple[float, float]]]) -> SimResult:
+    if executed != len(graph):
+        raise RuntimeError(
+            f"simulation deadlock: executed {executed}/{len(graph)} tasks (cycle?)")
+    makespan = max(progress.values(), default=0.0)
+    breakdown = _host_device_breakdown(busy_intervals, makespan,
+                                       lambda th: th == HOST_THREAD)
+    return SimResult(makespan=makespan, start=start, finish=finish,
+                     thread_busy=dict(busy), breakdown=breakdown)
+
+
 def simulate(graph: DependencyGraph, schedule: Optional[ScheduleFn] = None) -> SimResult:
-    """Paper Algorithm 1.
+    """Event-driven engine (default): paper Algorithm 1 semantics in O(E log V).
+
+    Ready tasks sit in a min-heap keyed by ``(effective start, ready time,
+    uid)``.  Keys are lower bounds (effective starts only grow), so a popped
+    entry whose key is stale is re-pushed with its current effective start;
+    a fresh minimum is executed directly.  When a custom ``schedule`` is
+    supplied, every entry within ``SCHED_EPS`` of the minimum is popped and
+    handed to the policy — the same candidate set the legacy loop's built-in
+    policies select from — and the losers are re-pushed.
+    """
+    ref: Dict[int, int] = {}
+    earliest: Dict[int, float] = {}          # "u.start" accumulator of Algorithm 1
+    by_uid: Dict[int, Task] = {}
+    heap: List[Tuple[float, float, int]] = []
+    for t in graph.tasks():
+        by_uid[t.uid] = t
+        ref[t.uid] = len(graph.parents(t))
+        earliest[t.uid] = 0.0
+        if ref[t.uid] == 0:
+            heap.append((0.0, 0.0, t.uid))
+    heapq.heapify(heap)
+
+    progress: Dict[str, float] = collections.defaultdict(float)   # P
+    start: Dict[int, float] = {}
+    finish: Dict[int, float] = {}
+    busy: Dict[str, float] = collections.defaultdict(float)
+    busy_intervals: Dict[str, List[Tuple[float, float]]] = collections.defaultdict(list)
+    executed = 0
+
+    while heap:
+        eff_key, _, uid = heapq.heappop(heap)
+        u = by_uid[uid]
+        eff = max(progress[u.thread], earliest[uid])
+        if eff > eff_key:                     # stale lower bound: re-key
+            heapq.heappush(heap, (eff, earliest[uid], uid))
+            continue
+        if schedule is not None:
+            candidates = [u]
+            spill: List[Tuple[float, float, int]] = []
+            while heap and heap[0][0] <= eff_key + SCHED_EPS:
+                _, _, uid2 = heapq.heappop(heap)
+                t2 = by_uid[uid2]
+                eff2 = max(progress[t2.thread], earliest[uid2])
+                if eff2 <= eff_key + SCHED_EPS:
+                    candidates.append(t2)
+                else:
+                    spill.append((eff2, earliest[uid2], uid2))
+            if len(candidates) > 1:
+                u = schedule(candidates, progress, earliest)
+                for t2 in candidates:
+                    if t2.uid != u.uid:
+                        eff2 = max(progress[t2.thread], earliest[t2.uid])
+                        spill.append((eff2, earliest[t2.uid], t2.uid))
+            for item in spill:
+                heapq.heappush(heap, item)
+
+        th = u.thread
+        s = max(progress[th], earliest[u.uid])
+        start[u.uid] = s
+        end = s + u.duration
+        finish[u.uid] = end
+        progress[th] = end + u.gap
+        busy[th] += u.duration
+        if u.duration > 0:
+            busy_intervals[th].append((s, end))
+        executed += 1
+        done = end + u.gap
+        for c in graph.children(u):
+            ref[c.uid] -= 1
+            earliest[c.uid] = max(earliest[c.uid], done)
+            if ref[c.uid] == 0:
+                eff_c = max(progress[c.thread], earliest[c.uid])
+                heapq.heappush(heap, (eff_c, earliest[c.uid], c.uid))
+
+    return _assemble(graph, executed, progress, start, finish, busy,
+                     busy_intervals)
+
+
+def simulate_reference(graph: DependencyGraph,
+                       schedule: Optional[ScheduleFn] = None) -> SimResult:
+    """Legacy frontier-scan loop (paper Algorithm 1 verbatim) — the oracle.
 
     Maintains the frontier ``F`` of dependency-ready tasks and per-thread
     progress ``P``; each iteration picks ``u = schedule(F)``, sets
     ``u.start = max(P[t], u.start)`` and advances
     ``P[t] = u.start + u.duration + u.gap``, then releases children whose
-    remaining-parent refcount hits zero, propagating ready times.
+    remaining-parent refcount hits zero, propagating ready times.  O(V·F) —
+    kept for arbitrary (non-eff-minimal) schedules and as the equivalence
+    oracle for :func:`simulate`.
     """
     sched = schedule or default_schedule
     ref: Dict[int, int] = {}
-    earliest: Dict[int, float] = {}          # "u.start" accumulator of Algorithm 1
+    earliest: Dict[int, float] = {}
     frontier: List[Task] = []
     for t in graph.tasks():
         ref[t.uid] = len(graph.parents(t))
@@ -110,7 +251,7 @@ def simulate(graph: DependencyGraph, schedule: Optional[ScheduleFn] = None) -> S
         if ref[t.uid] == 0:
             frontier.append(t)
 
-    progress: Dict[str, float] = collections.defaultdict(float)   # P
+    progress: Dict[str, float] = collections.defaultdict(float)
     start: Dict[int, float] = {}
     finish: Dict[int, float] = {}
     busy: Dict[str, float] = collections.defaultdict(float)
@@ -137,25 +278,5 @@ def simulate(graph: DependencyGraph, schedule: Optional[ScheduleFn] = None) -> S
             if ref[c.uid] == 0:
                 frontier.append(c)
 
-    if executed != len(graph):
-        raise RuntimeError(
-            f"simulation deadlock: executed {executed}/{len(graph)} tasks (cycle?)")
-
-    makespan = max(progress.values(), default=0.0)
-
-    # Paper Fig. 6 runtime breakdown: host-only / device-only / host+device parallel.
-    host_iv = _interval_union(
-        [iv for th, ivs in busy_intervals.items() if th == HOST_THREAD for iv in ivs])
-    dev_iv = _interval_union(
-        [iv for th, ivs in busy_intervals.items() if th != HOST_THREAD for iv in ivs])
-    host_busy = sum(e - s for s, e in host_iv)
-    dev_busy = sum(e - s for s, e in dev_iv)
-    par = _overlap(host_iv, dev_iv)
-    breakdown = {
-        "host_only_s": host_busy - par,
-        "device_only_s": dev_busy - par,
-        "parallel_s": par,
-        "idle_s": max(0.0, makespan - (host_busy + dev_busy - par)),
-    }
-    return SimResult(makespan=makespan, start=start, finish=finish,
-                     thread_busy=dict(busy), breakdown=breakdown)
+    return _assemble(graph, executed, progress, start, finish, busy,
+                     busy_intervals)

@@ -47,6 +47,25 @@ def ici_channel(axis: str) -> str:
     return f"ici:{axis}"
 
 
+def worker_thread(worker: int, thread: str) -> str:
+    """Thread name of a worker-local resource inside a cluster graph.
+
+    The cluster simulator (:mod:`repro.core.cluster`) replicates a
+    single-worker graph; each replica's resources are namespaced as
+    ``w<i>/<thread>`` so one global simulation can model N workers.
+    """
+    return f"w{worker}/{thread}"
+
+
+def split_worker_thread(thread: str) -> Tuple[Optional[int], str]:
+    """Inverse of :func:`worker_thread`: ``(worker or None, local thread)``."""
+    if thread.startswith("w") and "/" in thread:
+        head, rest = thread.split("/", 1)
+        if head[1:].isdigit():
+            return int(head[1:]), rest
+    return None, thread
+
+
 @dataclasses.dataclass
 class Task:
     """One node of the dependency graph (paper §4.2.1).

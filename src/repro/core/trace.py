@@ -46,10 +46,8 @@ class TraceBundle:
     def xla_cost_analysis(self) -> Dict[str, float]:
         if self.compiled is None:
             return {}
-        try:
-            return dict(self.compiled.cost_analysis())
-        except Exception:
-            return {}
+        from repro.compat import cost_analysis_dict
+        return cost_analysis_dict(self.compiled)
 
     def memory_analysis(self):
         if self.compiled is None:

@@ -165,6 +165,13 @@ class GraphTransform:
     def simulate(self) -> SimResult:
         return simulate(self.graph, self.schedule)
 
+    def cluster(self, workers, **kwargs):
+        """Replicate the transformed graph across ``workers`` and return the
+        :class:`repro.core.cluster.ClusterGraph` (schedule carried over)."""
+        from .cluster import ClusterGraph
+        kwargs.setdefault("schedule", self.schedule)
+        return ClusterGraph.build(self.graph, workers, **kwargs)
+
 
 def predicted_speedup(baseline: DependencyGraph,
                       build: Callable[[GraphTransform], None],

@@ -19,6 +19,7 @@ from __future__ import annotations
 import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from .cluster import ClusterGraph, ClusterResult, WorkerSpec, _as_specs
 from .costmodel import CollectiveModel, CostModel
 from .graph import DependencyGraph
 from .layermap import bucket_layers
@@ -476,7 +477,11 @@ def what_if_zero(graph: DependencyGraph, num_workers: int,
                   duration=coll.group_time("all-gather", payload, num_workers),
                   comm_bytes=payload, phase="comm",
                   attrs={"collective": "all-gather", "group_size": num_workers})
-        children = list(tf.graph.children(u))
+        # forward only cross-thread consumers (the weight-update barrier).
+        # u's same-lane successor is the *next bucket's* reduce-scatter; the
+        # channel lane already orders it, and an explicit ag->successor edge
+        # would contradict ag's position at the lane tail (a cycle)
+        children = [c for c in tf.graph.children(u) if c.thread != u.thread]
         tf.append(ag, parents=[u], children=children)
     n = tf.scale(all_of(on_device, by_phase("update")), 1.0 / num_workers)
     return tf
@@ -536,3 +541,107 @@ def what_if_grad_accum(graph: DependencyGraph, microbatches: int
     tf.scale(all_of(on_device, by_phase("fwd")), float(microbatches))
     tf.scale(all_of(on_device, by_phase("bwd")), float(microbatches))
     return tf
+
+
+# --------------------------------------------------- cluster-routed what-ifs
+# The ``num_workers`` what-ifs above splice *analytical* collective costs into
+# one worker's graph — every worker collapses onto one timeline.  The
+# ``cluster_*`` functions below route the same transformations through
+# :class:`repro.core.cluster.ClusterGraph`: the transformed single-worker
+# graph is replicated across N (possibly heterogeneous) workers, collectives
+# become cross-worker ring/hierarchical structures, and one global simulation
+# yields a per-worker :class:`SimResult` breakdown — answering questions the
+# single-graph path cannot (stragglers, skewed links, mixed generations).
+
+_worker_specs = _as_specs       # int N or explicit WorkerSpec list, validated
+
+
+def cluster_what_if_distributed(graph: DependencyGraph,
+                                layer_grad_bytes: Dict[str, float],
+                                workers, *,
+                                bucket_bytes: float = 25 * 1024 * 1024,
+                                cost: Optional[CostModel] = None,
+                                collective_mode: str = "ring"
+                                ) -> ClusterResult:
+    """DDP what-if on the global cluster graph (paper Alg. 6 x dPRO).
+
+    With uniform ``workers`` this matches :func:`what_if_distributed`'s
+    single-graph prediction (the ring legs telescope to the same analytical
+    collective time); heterogeneous specs answer the questions the
+    single-graph path cannot.
+    """
+    specs = _worker_specs(workers)
+    cost = cost or CostModel()
+    tf = what_if_distributed(graph, layer_grad_bytes, num_workers=len(specs),
+                             bucket_bytes=bucket_bytes, cost=cost)
+    cg = ClusterGraph.build(tf.graph, specs, cost=cost,
+                            collective_mode=collective_mode)
+    return cg.simulate()
+
+
+def cluster_what_if_zero(graph: DependencyGraph,
+                         layer_grad_bytes: Dict[str, float],
+                         workers, *, cost: Optional[CostModel] = None,
+                         collective_mode: str = "ring") -> ClusterResult:
+    """ZeRO sharding simulated on the global graph: the reduce-scatter and
+    param all-gather each become cross-worker ring legs."""
+    specs = _worker_specs(workers)
+    cost = cost or CostModel()
+    tf = what_if_distributed(graph, layer_grad_bytes, num_workers=len(specs),
+                             cost=cost)
+    tf2 = what_if_zero(tf.graph, num_workers=len(specs), cost=cost)
+    cg = ClusterGraph.build(tf2.graph, specs, cost=cost,
+                            collective_mode=collective_mode)
+    return cg.simulate()
+
+
+def cluster_what_if_p3(graph: DependencyGraph,
+                       layer_grad_bytes: Dict[str, float],
+                       workers, *, bandwidth: float,
+                       slice_bytes: float = 4 * 1024 * 1024,
+                       priority: bool = True,
+                       cost: Optional[CostModel] = None) -> ClusterResult:
+    """P3 on the global graph: pushes stay worker-local (preserving the
+    overlap with late backprop); pulls gate on every worker's push via the
+    parameter-server aggregation barrier.  The priority schedule carries
+    over to the global simulation unchanged."""
+    specs = _worker_specs(workers)
+    cost = cost or CostModel()
+    tf = what_if_p3(graph, layer_grad_bytes, len(specs), bandwidth=bandwidth,
+                    slice_bytes=slice_bytes, priority=priority, cost=cost)
+    cg = ClusterGraph.build(tf.graph, specs, cost=cost,
+                            schedule=tf.schedule)
+    return cg.simulate()
+
+
+def cluster_what_if_straggler(graph: DependencyGraph,
+                              layer_grad_bytes: Dict[str, float],
+                              num_workers: int, *,
+                              straggler: int = 0, slowdown: float = 1.5,
+                              cost: Optional[CostModel] = None,
+                              collective_mode: str = "ring") -> ClusterResult:
+    """One slow worker, modeled structurally: unlike :func:`what_if_straggler`
+    (which amortizes the delay into every collective's duration), the
+    straggler's late gradients stall the ring legs and the delay propagates
+    to the other workers through the dependency edges."""
+    specs = [WorkerSpec(compute_scale=slowdown if i == straggler else 1.0)
+             for i in range(num_workers)]
+    return cluster_what_if_distributed(graph, layer_grad_bytes, specs,
+                                       cost=cost,
+                                       collective_mode=collective_mode)
+
+
+def cluster_what_if_bandwidth(graph: DependencyGraph,
+                              layer_grad_bytes: Dict[str, float],
+                              num_workers: int, *,
+                              scales: Sequence[float],
+                              cost: Optional[CostModel] = None
+                              ) -> ClusterResult:
+    """Skewed per-worker link bandwidth (paper Fig. 2's sweep, made
+    per-link): ``scales[i]`` throttles the ring links adjacent to worker i,
+    so one congested NIC slows only the legs that traverse it."""
+    if len(scales) != num_workers:
+        raise ValueError("need one bandwidth scale per worker")
+    specs = [WorkerSpec(bandwidth_scale=s) for s in scales]
+    return cluster_what_if_distributed(graph, layer_grad_bytes, specs,
+                                       cost=cost)

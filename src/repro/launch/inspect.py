@@ -30,7 +30,8 @@ def rank_cell(arch: str, shape_name: str, multi_pod: bool = False,
     shape = registry.SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     cost = CostModel(topo=mesh_topology(multi_pod))
-    with jax.set_mesh(mesh):
+    from repro import compat
+    with compat.set_mesh(mesh):
         cell = build_cell(cfg, shape, mesh,
                           ShardingRules(layout=layout))
         compiled = cell.lower().compile()

@@ -27,8 +27,9 @@ import re
 import jax
 
 from repro.configs import registry
+from repro.core.cluster import ClusterResult, WorkerSpec
 from repro.core.costmodel import CostModel
-from repro.core.hlo import parse_hlo_module, _CostVisitor, COLLECTIVE_OPS
+from repro.core.hlo import parse_hlo_module, extract_graph, _CostVisitor, COLLECTIVE_OPS
 from repro.core.roofline import roofline_report, format_row
 from repro.core.task import TaskKind
 from repro.launch.mesh import make_production_mesh
@@ -99,6 +100,71 @@ def flash_traffic(cfg, shape, chips: int) -> float:
     return passes * layers * per_pass / chips
 
 
+def format_cluster_report(result: ClusterResult, *, title: str = "cluster",
+                          unit: float = 1e3) -> str:
+    """Per-worker table for a :class:`ClusterResult` (unit=1e3 -> ms).
+
+    One row per worker: local makespan, device/comm/host busy time, idle
+    time, and the slowdown vs the fastest worker — the straggler / skew
+    signal the single-graph what-if path cannot produce.
+    """
+    best = min((r.makespan for r in result.per_worker.values()),
+               default=0.0) or 1.0
+    lines = [f"== {title}: {len(result.workers)} workers, "
+             f"global makespan {result.makespan * unit:.3f} ==",
+             "worker  makespan   device     comm      host      idle    vs-best"]
+    for i in sorted(result.per_worker):
+        r = result.per_worker[i]
+        dev = r.thread_busy.get("device", 0.0)
+        host = r.thread_busy.get("host", 0.0)
+        comm = sum(v for k, v in r.thread_busy.items()
+                   if k not in ("device", "host", "data"))
+        idle = r.breakdown.get("idle_s", 0.0)
+        lines.append(f"w{i:<5d}  {r.makespan * unit:8.3f}  {dev * unit:8.3f} "
+                     f"{comm * unit:8.3f}  {host * unit:8.3f}  "
+                     f"{idle * unit:8.3f}   {r.makespan / best:5.2f}x")
+    return "\n".join(lines)
+
+
+def cluster_whatif_report(module, cfg, cost, *, workers: int,
+                          straggler: str = "") -> str:
+    """Cluster-simulate the compiled step across ``workers`` replicas.
+
+    Gradient buckets are keyed by the layer tags that actually appear on the
+    graph's backward tasks so the all-reduce legs gate on real backprop
+    (wait-free-backprop wiring); total payload is the config's parameter
+    bytes.  If the trace carries no layer tags (fully scanned/fused module),
+    the fallback is one synthetic bucket list — the report then shows
+    per-worker compute/comm splits but no backprop-overlap coupling.
+    """
+    from repro.core import whatif
+    # validate the straggler spec before the (expensive) graph extraction
+    specs = [WorkerSpec() for _ in range(workers)]
+    title = f"cluster x{workers}"
+    if straggler:
+        try:
+            idx_s, slow_s = straggler.split(":")
+            idx, slow = int(idx_s), float(slow_s)
+        except ValueError:
+            raise SystemExit(
+                f"--straggler expects IDX:SLOWDOWN (e.g. 0:2.0), "
+                f"got {straggler!r}")
+        if not 0 <= idx < workers:
+            raise SystemExit(
+                f"--straggler index {idx} out of range for {workers} workers")
+        specs[idx] = WorkerSpec(compute_scale=slow)
+        title += f" (w{idx} {slow}x slower)"
+    graph = extract_graph(module, cost)
+    layers = sorted({t.layer for t in graph.tasks()
+                     if t.layer and t.phase == "bwd"})
+    if not layers:
+        layers = [f"layer{i}" for i in range(max(1, cfg.n_layers))]
+    per_layer = 2.0 * active_params(cfg) / len(layers)  # bf16 grads
+    grads = {l: per_layer for l in layers}
+    result = whatif.cluster_what_if_distributed(graph, grads, specs, cost=cost)
+    return format_cluster_report(result, title=title)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -107,6 +173,10 @@ def main() -> None:
     ap.add_argument("--set", action="append", default=[])
     ap.add_argument("--tag", default="modeled_flash")
     ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--cluster", type=int, default=0,
+                    help="also cluster-simulate N data-parallel workers")
+    ap.add_argument("--straggler", default="",
+                    help="IDX:SLOWDOWN, e.g. 0:2.0 (with --cluster)")
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch)
@@ -118,7 +188,8 @@ def main() -> None:
     chips = 512 if multi else 256
     mesh = make_production_mesh(multi_pod=multi)
     cost = CostModel(topo=mesh_topology(multi))
-    with jax.set_mesh(mesh):
+    from repro import compat
+    with compat.set_mesh(mesh):
         cell = build_cell(cfg, shape, mesh)
         compiled = cell.lower().compile()
     module = parse_hlo_module(compiled.as_text())
@@ -140,6 +211,9 @@ def main() -> None:
     print("compiled    :", format_row(args.arch, args.shape, args.mesh, base))
     print("with flash  :", format_row(args.arch, args.shape, args.mesh,
                                       modeled))
+    if args.cluster:
+        print(cluster_whatif_report(module, cfg, cost, workers=args.cluster,
+                                    straggler=args.straggler))
     print(f"attention-loop bytes replaced: {tot['attn_bytes']/1e9:.1f} GB "
           f"-> flash kernel {fb/1e9:.2f} GB per device")
     os.makedirs(args.out, exist_ok=True)

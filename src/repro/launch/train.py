@@ -53,7 +53,8 @@ def main() -> None:
             step += 1
 
     trainer = Trainer(cfg, tc, optimizer=opt, mesh=mesh)
-    ctx = jax.set_mesh(mesh) if mesh is not None else _null()
+    from repro import compat
+    ctx = compat.set_mesh(mesh) if mesh is not None else _null()
     with ctx:
         trainer.fit(Prefetcher(batches()), steps=args.steps)
     first = trainer.metrics_log[0]["loss"]

@@ -1,0 +1,238 @@
+"""Cluster simulation subsystem (repro.core.cluster) acceptance tests.
+
+The ISSUE's acceptance criteria live here:
+
+* a uniform cluster's global simulation matches the single-graph DDP what-if
+  prediction within 5% (they agree to float precision by construction —
+  ring legs telescope to the analytical collective time);
+* a 2x-slower straggler shifts the makespan as the analytical
+  ring-all-reduce model predicts (everyone waits for the straggler).
+"""
+
+import pytest
+
+from repro.core import (ClusterGraph, ClusterResult, CostModel, WorkerSpec,
+                        DependencyGraph, Task, TaskKind, simulate, whatif,
+                        DEVICE_STREAM, HOST_THREAD, worker_thread,
+                        split_worker_thread)
+from synthgraphs import training_step_graph
+
+LAYERS = 6
+GRADS = {f"l{i}": 30e6 for i in range(LAYERS)}
+
+
+@pytest.fixture()
+def step_graph():
+    return training_step_graph(layers=LAYERS)
+
+
+def test_worker_thread_roundtrip():
+    assert worker_thread(3, "device") == "w3/device"
+    assert split_worker_thread("w3/device") == (3, "device")
+    assert split_worker_thread("device") == (None, "device")
+    assert split_worker_thread("w3x/device") == (None, "w3x/device")
+
+
+class TestUniformEquivalence:
+    def test_matches_single_graph_ddp(self, step_graph):
+        """Acceptance: uniform ClusterGraph == single-graph DDP within 5%."""
+        cost = CostModel()
+        tf = whatif.what_if_distributed(step_graph, GRADS, num_workers=8,
+                                        cost=cost)
+        single = tf.simulate().makespan
+        res = ClusterGraph.build(tf.graph, 8, cost=cost).simulate()
+        assert res.makespan == pytest.approx(single, rel=0.05)
+        # in fact the ring legs telescope exactly
+        assert res.makespan == pytest.approx(single, rel=1e-9)
+        # every worker sees the same local makespan
+        for m in res.worker_makespans():
+            assert m == pytest.approx(res.makespan, rel=1e-9)
+
+    def test_wrapper_matches_build(self, step_graph):
+        r1 = whatif.cluster_what_if_distributed(step_graph, GRADS, 4)
+        tf = whatif.what_if_distributed(step_graph, GRADS, num_workers=4)
+        r2 = ClusterGraph.build(tf.graph, 4).simulate()
+        assert r1.makespan == pytest.approx(r2.makespan, rel=1e-12)
+
+    def test_fused_mode_matches_ring_for_uniform(self, step_graph):
+        tf = whatif.what_if_distributed(step_graph, GRADS, num_workers=8)
+        ring = ClusterGraph.build(tf.graph, 8).simulate()
+        fused = ClusterGraph.build(tf.graph, 8,
+                                   collective_mode="fused").simulate()
+        assert fused.makespan == pytest.approx(ring.makespan, rel=1e-9)
+
+
+class TestStraggler:
+    def test_straggler_shift_matches_analytical(self, step_graph):
+        """Acceptance: 2x straggler shifts makespan by its extra compute.
+
+        Synchronous ring semantics: every ring leg waits for the straggler's
+        gradients, so global makespan ~= uniform makespan + (slowdown-1) *
+        straggler device compute (the collective time itself is unchanged).
+        """
+        slowdown = 2.0
+        uniform = whatif.cluster_what_if_distributed(step_graph, GRADS, 8)
+        strag = whatif.cluster_what_if_straggler(step_graph, GRADS, 8,
+                                                 straggler=0,
+                                                 slowdown=slowdown)
+        device_compute = sum(t.duration
+                             for t in step_graph.lane_tasks(DEVICE_STREAM))
+        expected = uniform.makespan + (slowdown - 1.0) * device_compute
+        assert strag.makespan == pytest.approx(expected, rel=0.02)
+        assert strag.straggler() == 0
+
+    def test_straggler_slows_everyone(self, step_graph):
+        """dPRO's point: the delay propagates to every worker through the
+        ring edges, not just the slow replica."""
+        res = whatif.cluster_what_if_straggler(step_graph, GRADS, 8,
+                                               straggler=3, slowdown=2.0)
+        uniform = whatif.cluster_what_if_distributed(step_graph, GRADS, 8)
+        for i, m in enumerate(res.worker_makespans()):
+            assert m > uniform.worker_makespans()[i] * 1.2
+        assert res.straggler() == 3
+
+    def test_per_worker_breakdown_shows_idle_skew(self, step_graph):
+        """Fast workers idle while waiting for the straggler's gradients."""
+        res = whatif.cluster_what_if_straggler(step_graph, GRADS, 8,
+                                               straggler=0, slowdown=2.0)
+        fast = res.per_worker[4]
+        slow = res.per_worker[0]
+        assert slow.thread_busy["device"] > fast.thread_busy["device"] * 1.8
+        assert fast.breakdown["idle_s"] > slow.breakdown["idle_s"]
+
+
+class TestHeterogeneity:
+    def test_bandwidth_skew_slows_ring(self, step_graph):
+        uniform = whatif.cluster_what_if_distributed(step_graph, GRADS, 4)
+        skew = whatif.cluster_what_if_bandwidth(
+            step_graph, GRADS, 4, scales=[1.0, 1.0, 0.25, 1.0])
+        assert skew.makespan > uniform.makespan
+        with pytest.raises(ValueError):
+            whatif.cluster_what_if_bandwidth(step_graph, GRADS, 4,
+                                             scales=[1.0])
+
+    def test_dead_link_models_not_crashes(self, step_graph):
+        """bandwidth_scale=0 (dead NIC) must model an astronomically slow
+        link, not raise ZeroDivisionError."""
+        res = whatif.cluster_what_if_bandwidth(
+            step_graph, GRADS, 4, scales=[0.0, 1.0, 1.0, 1.0])
+        uniform = whatif.cluster_what_if_distributed(step_graph, GRADS, 4)
+        assert res.makespan > uniform.makespan * 100
+
+    def test_mixed_generations(self, step_graph):
+        """Half the fleet 1.5x slower: makespan tracks the slow generation."""
+        specs = [WorkerSpec(compute_scale=1.5 if i % 2 else 1.0)
+                 for i in range(4)]
+        res = whatif.cluster_what_if_distributed(step_graph, GRADS, specs)
+        uniform = whatif.cluster_what_if_distributed(step_graph, GRADS, 4)
+        slow_uniform = whatif.cluster_what_if_distributed(
+            step_graph, GRADS, [WorkerSpec(compute_scale=1.5)] * 4)
+        assert uniform.makespan < res.makespan <= slow_uniform.makespan + 1e-12
+
+    def test_cross_pod_ring_slower_than_single_pod(self, step_graph):
+        single = whatif.cluster_what_if_distributed(step_graph, GRADS, 8)
+        pods = [WorkerSpec(pod=i // 4) for i in range(8)]
+        multi = whatif.cluster_what_if_distributed(step_graph, GRADS, pods)
+        assert multi.makespan > single.makespan    # two DCN hops in the ring
+
+    def test_hierarchical_beats_flat_ring_across_pods(self, step_graph):
+        """BlueConnect's reason to exist: only the shard crosses the DCN."""
+        pods = [WorkerSpec(pod=i // 4) for i in range(8)]
+        flat = whatif.cluster_what_if_distributed(step_graph, GRADS, pods)
+        hier = whatif.cluster_what_if_distributed(step_graph, GRADS, pods,
+                                                  collective_mode="hierarchical")
+        assert hier.makespan < flat.makespan
+
+    def test_hierarchical_single_pod_close_to_ring(self, step_graph):
+        tf = whatif.what_if_distributed(step_graph, GRADS, num_workers=8)
+        ring = ClusterGraph.build(tf.graph, 8).simulate()
+        hier = ClusterGraph.build(tf.graph, 8,
+                                  collective_mode="hierarchical").simulate()
+        # same total bytes over the same links; only hop/barrier bookkeeping
+        # differs between one 2(n-1)-step ring and rs+ag stages
+        assert hier.makespan == pytest.approx(ring.makespan, rel=0.05)
+
+
+class TestRoutedWhatIfs:
+    def test_zero_routes_and_speeds_update(self, step_graph):
+        ddp = whatif.cluster_what_if_distributed(step_graph, GRADS, 8)
+        zero = whatif.cluster_what_if_zero(step_graph, GRADS, 8)
+        assert isinstance(zero, ClusterResult)
+        # sharded update: each worker's update lane busy time drops ~8x
+        upd_ddp = ddp.per_worker[0].thread_busy["device"]
+        upd_zero = zero.per_worker[0].thread_busy["device"]
+        assert upd_zero < upd_ddp
+
+    def test_hierarchical_mode_is_op_aware(self, step_graph):
+        """BlueConnect decomposition applies to all-reduces only; ZeRO's
+        bare reduce-scatter / all-gather keep their single-stage ring legs
+        (a past bug costed them as full three-stage all-reduces)."""
+        ring = whatif.cluster_what_if_zero(step_graph, GRADS, 8)
+        hier = whatif.cluster_what_if_zero(step_graph, GRADS, 8,
+                                           collective_mode="hierarchical")
+        assert hier.makespan == pytest.approx(ring.makespan, rel=1e-9)
+
+    def test_p3_cluster_runs_with_priority(self, step_graph):
+        res = whatif.cluster_what_if_p3(step_graph, GRADS, 4, bandwidth=5e9)
+        assert isinstance(res, ClusterResult)
+        assert res.makespan > 0
+        assert len(res.per_worker) == 4
+        # pulls run on every worker's recv channel
+        for i in range(4):
+            assert res.per_worker[i].thread_busy.get("ici:recv", 0.0) > 0
+
+    def test_p3_pulls_gate_on_global_pushes(self, step_graph):
+        """A straggler's late pushes delay every worker's pulls (PS
+        aggregation semantics), not just its own."""
+        specs = [WorkerSpec(compute_scale=2.0 if i == 0 else 1.0)
+                 for i in range(4)]
+        tf = whatif.what_if_p3(step_graph, GRADS, 4, bandwidth=5e9)
+        uni = ClusterGraph.build(tf.graph, 4, schedule=tf.schedule).simulate()
+        strag = ClusterGraph.build(tf.graph, specs,
+                                   schedule=tf.schedule).simulate()
+        # worker 3 is full-speed in both runs, yet finishes later with the
+        # straggler in the fleet
+        assert strag.per_worker[3].makespan > uni.per_worker[3].makespan
+
+    def test_transform_cluster_convenience(self, step_graph):
+        tf = whatif.what_if_distributed(step_graph, GRADS, num_workers=4)
+        res = tf.cluster(4).simulate()
+        assert res.makespan == pytest.approx(tf.simulate().makespan, rel=1e-9)
+
+
+class TestBuildInvariants:
+    def test_graph_validates_and_scales(self, step_graph):
+        tf = whatif.what_if_distributed(step_graph, GRADS, num_workers=4)
+        cg = ClusterGraph.build(tf.graph, 4)
+        cg.graph.validate()
+        base_n = len(tf.graph)
+        # replicas minus per-worker collective tasks, plus ring legs
+        n_coll = sum(1 for t in tf.graph.tasks()
+                     if t.kind == TaskKind.COLLECTIVE)
+        expected = 4 * (base_n - n_coll) + 4 * n_coll * 2 * 3
+        assert len(cg.graph) == expected
+
+    def test_single_worker_cluster_is_identity(self, step_graph):
+        tf = whatif.what_if_distributed(step_graph, GRADS, num_workers=1)
+        res = ClusterGraph.build(tf.graph, 1).simulate()
+        assert res.makespan == pytest.approx(tf.simulate().makespan, rel=1e-12)
+
+    def test_rejects_bad_inputs(self, step_graph):
+        from repro.core import GraphError
+        with pytest.raises(GraphError):
+            ClusterGraph.build(step_graph, 0)
+        with pytest.raises(GraphError):
+            ClusterGraph.build(step_graph, 2, collective_mode="quantum")
+
+
+def test_format_cluster_report():
+    from repro.launch.perf_report import format_cluster_report
+    g = training_step_graph()
+    res = whatif.cluster_what_if_straggler(g, GRADS, 4, straggler=1,
+                                           slowdown=2.0)
+    out = format_cluster_report(res, title="test")
+    assert "test: 4 workers" in out
+    rows = [l for l in out.splitlines()
+            if l.startswith("w") and not l.startswith("worker")]
+    assert len(rows) == 4
+    assert any("2.0" in r for r in rows)   # straggler's vs-best column

@@ -1,5 +1,10 @@
 """Paper §6.5 methodology with *measured* multi-device ground truth.
 
+Marked ``@pytest.mark.slow``: each test spawns a fresh-XLA_FLAGS subprocess
+that compiles multi-device programs (minutes on a cold cache).  The default
+tier-1 run deselects them (``addopts = -m "not slow"`` in pyproject.toml);
+``pytest -m slow`` still exercises them.
+
 The paper's flagship claim: distributed training runtime predicted from a
 single-worker profile.  This container has one physical CPU but XLA can host
 N virtual devices; a subprocess (fresh XLA_FLAGS) measures a real 8-way
@@ -63,13 +68,13 @@ _DDP_SNIPPET = textwrap.dedent("""
     pred_slowdown = pred / base
 
     # --- ground truth: real 8-way DP on host devices
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh, set_mesh
+    mesh = make_mesh((8,), ("data",))
     xg = jnp.concatenate([x1] * 8, axis=0)
     xg = jax.device_put(xg, NamedSharding(mesh, P("data", None, None)))
     Wr = jax.device_put(W, NamedSharding(mesh, P()))
     t1 = measure_wallclock(step, W, x1, iters=20)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         t8 = measure_wallclock(step, Wr, xg, iters=20)
     true_slowdown = t8 / t1
 
@@ -79,6 +84,7 @@ _DDP_SNIPPET = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_ddp_prediction_vs_measured_8way():
     code = _DDP_SNIPPET.format(src=_SRC)
     proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
@@ -107,13 +113,12 @@ _ELASTIC_SNIPPET = textwrap.dedent("""
     tree = {{"w": jnp.arange(64.0).reshape(8, 8),
              "b": jnp.ones((16,), jnp.bfloat16)}}
 
-    mesh4 = jax.make_mesh((4,), ("data",), devices=jax.devices()[:4],
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh4 = make_mesh((4,), ("data",), devices=jax.devices()[:4])
     sharded = jax.device_put(tree, NamedSharding(mesh4, P("data")))
     save_checkpoint(tmp, 11, sharded)
 
-    mesh2 = jax.make_mesh((2,), ("data",), devices=jax.devices()[:2],
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    mesh2 = make_mesh((2,), ("data",), devices=jax.devices()[:2])
     sh2 = {{"w": NamedSharding(mesh2, P("data", None)),
             "b": NamedSharding(mesh2, P("data"))}}
     out, step = restore_checkpoint(tmp, tree, shardings=sh2)
@@ -124,6 +129,7 @@ _ELASTIC_SNIPPET = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_elastic_reshard_across_mesh_sizes(tmp_path):
     code = _ELASTIC_SNIPPET.format(src=_SRC, tmp=str(tmp_path))
     proc = subprocess.run([sys.executable, "-c", code], capture_output=True,

@@ -1,0 +1,71 @@
+"""Golden regression tests: frozen predicted speedups on a fixed graph.
+
+The point is change detection, not truth: the values in
+``tests/golden/speedups.json`` were produced by the analytical models on the
+fixed synthetic step graph, and any engine/model/transform refactor that
+moves a prediction by more than the stored ``rtol`` must either be a bug or
+consciously re-freeze the numbers (regenerate via the commands in each
+test's docstring — the computation is the test body itself).
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core import whatif, simulate
+from synthgraphs import training_step_graph
+
+_GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "speedups.json")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(_GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def setup(golden):
+    layers = golden["graph"]["layers"]
+    grads = {f"l{i}": golden["graph"]["grad_bytes_per_layer"]
+             for i in range(layers)}
+    return training_step_graph(layers=layers), grads
+
+
+def _check(golden, key, value):
+    want = golden[key]["value"]
+    assert value == pytest.approx(want, rel=golden[key]["rtol"]), (
+        f"{key}: got {value!r}, golden {want!r} — if the change is "
+        f"intentional, re-freeze tests/golden/speedups.json")
+
+
+def test_amp_golden(golden, setup):
+    g, _ = setup
+    base = simulate(g).makespan
+    _check(golden, "amp_speedup",
+           base / whatif.what_if_amp(g).simulate().makespan)
+
+
+def test_p3_golden(golden, setup):
+    g, grads = setup
+    plain = whatif.what_if_p3(g, grads, 4, bandwidth=5e9, priority=False,
+                              slice_bytes=float("inf")).simulate().makespan
+    prio = whatif.what_if_p3(g, grads, 4, bandwidth=5e9,
+                             priority=True).simulate().makespan
+    _check(golden, "p3_priority_speedup_over_plain_ps", plain / prio)
+
+
+def test_zero_golden(golden, setup):
+    g, grads = setup
+    ddp = whatif.cluster_what_if_distributed(g, grads, 8).makespan
+    zero = whatif.cluster_what_if_zero(g, grads, 8).makespan
+    _check(golden, "zero_speedup_over_ddp", ddp / zero)
+
+
+def test_cluster_straggler_golden(golden, setup):
+    g, grads = setup
+    ddp = whatif.cluster_what_if_distributed(g, grads, 8).makespan
+    strag = whatif.cluster_what_if_straggler(g, grads, 8, straggler=0,
+                                             slowdown=2.0).makespan
+    _check(golden, "cluster_straggler_2x_slowdown", ddp / strag)

@@ -1,7 +1,10 @@
-"""Dependency-graph construction invariants (paper §4.2) + property tests."""
+"""Dependency-graph construction invariants (paper §4.2).
 
-import hypothesis
-import hypothesis.strategies as st
+Hypothesis-based property tests live in ``test_graph_properties.py`` so this
+module collects and runs on machines without the optional ``hypothesis`` dev
+dependency (declared in pyproject.toml ``[project.optional-dependencies]``).
+"""
+
 import pytest
 
 from repro.core import (DependencyGraph, GraphError, Task, TaskKind,
@@ -76,37 +79,3 @@ class TestBasics:
         assert len(g.select(lambda t: t.thread == HOST_THREAD)) == 2
 
 
-@st.composite
-def random_graph(draw):
-    g = DependencyGraph()
-    n_dev = draw(st.integers(1, 12))
-    n_host = draw(st.integers(0, 6))
-    dev = chain(g, n_dev)
-    host = chain(g, n_host, HOST_THREAD)
-    # random forward (acyclic) cross-edges host -> device
-    for h_i in range(n_host):
-        for d_i in range(n_dev):
-            if draw(st.booleans()):
-                g.add_edge(host[h_i], dev[d_i])
-    return g
-
-
-class TestProperties:
-    @hypothesis.given(random_graph())
-    @hypothesis.settings(max_examples=50, deadline=None)
-    def test_random_graphs_valid(self, g):
-        g.validate()
-        assert g.critical_path() <= g.total_work() + 1e-9
-
-    @hypothesis.given(random_graph(), st.integers(0, 5))
-    @hypothesis.settings(max_examples=50, deadline=None)
-    def test_remove_preserves_acyclicity(self, g, idx):
-        ts = g.tasks()
-        g.remove_task(ts[idx % len(ts)])
-        g.validate()
-
-    @hypothesis.given(random_graph())
-    @hypothesis.settings(max_examples=30, deadline=None)
-    def test_copy_roundtrip_stats(self, g):
-        s1, s2 = g.stats(), g.copy().stats()
-        assert s1 == s2

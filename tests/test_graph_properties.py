@@ -1,0 +1,59 @@
+"""Hypothesis property tests for graph invariants (paper §4.2).
+
+Skipped wholesale when the optional ``hypothesis`` dev dependency is absent
+(``pytest.importorskip``) so a clean machine still collects and runs the rest
+of the tier-1 suite end-to-end.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.core import (DependencyGraph, Task, TaskKind, DEVICE_STREAM,
+                        HOST_THREAD)
+
+
+def mk(name="t", thread=DEVICE_STREAM, dur=1.0, **kw):
+    return Task(name=name, kind=kw.pop("kind", TaskKind.COMPUTE),
+                thread=thread, duration=dur, **kw)
+
+
+def chain(g, n, thread=DEVICE_STREAM):
+    return [g.add_task(mk(f"{thread}{i}", thread)) for i in range(n)]
+
+
+@st.composite
+def random_graph(draw):
+    g = DependencyGraph()
+    n_dev = draw(st.integers(1, 12))
+    n_host = draw(st.integers(0, 6))
+    dev = chain(g, n_dev)
+    host = chain(g, n_host, HOST_THREAD)
+    # random forward (acyclic) cross-edges host -> device
+    for h_i in range(n_host):
+        for d_i in range(n_dev):
+            if draw(st.booleans()):
+                g.add_edge(host[h_i], dev[d_i])
+    return g
+
+
+class TestProperties:
+    @hypothesis.given(random_graph())
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_random_graphs_valid(self, g):
+        g.validate()
+        assert g.critical_path() <= g.total_work() + 1e-9
+
+    @hypothesis.given(random_graph(), st.integers(0, 5))
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_remove_preserves_acyclicity(self, g, idx):
+        ts = g.tasks()
+        g.remove_task(ts[idx % len(ts)])
+        g.validate()
+
+    @hypothesis.given(random_graph())
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_copy_roundtrip_stats(self, g):
+        s1, s2 = g.stats(), g.copy().stats()
+        assert s1 == s2

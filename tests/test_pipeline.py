@@ -48,12 +48,11 @@ _SPMD_SNIPPET = textwrap.dedent("""
     import numpy as np
     from functools import partial
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map, make_mesh
     from repro.parallel import gpipe_spmd
 
     S, M, mb, d = 4, 6, 2, 8
-    mesh = jax.make_mesh((S,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((S,), ("stage",))
     key = jax.random.PRNGKey(0)
     Ws = jax.random.normal(key, (S, d, d)) * 0.3          # one weight per stage
     x = jax.random.normal(jax.random.fold_in(key, 1), (M, mb, d))

@@ -1,7 +1,10 @@
-"""Daydream Algorithm 1 simulation semantics."""
+"""Daydream Algorithm 1 simulation semantics.
 
-import hypothesis
-import hypothesis.strategies as st
+Hypothesis-based property tests live in ``test_simulate_properties.py``
+(guarded by ``pytest.importorskip``); engine-equivalence randomized tests —
+which need no optional dependency — live in ``test_engine_equivalence.py``.
+"""
+
 import pytest
 
 from repro.core import (DependencyGraph, Task, TaskKind, simulate,
@@ -71,22 +74,3 @@ def test_makespan_at_least_critical_path():
     assert r.makespan >= g.critical_path() - 1e-9
 
 
-@hypothesis.given(st.lists(st.tuples(st.sampled_from(["device", "host",
-                                                      "ici:x"]),
-                                     st.floats(0.01, 5.0),
-                                     st.floats(0.0, 1.0)),
-                           min_size=1, max_size=30))
-@hypothesis.settings(max_examples=60, deadline=None)
-def test_property_bounds(items):
-    """critical path <= makespan <= total work, executed == all tasks."""
-    g = DependencyGraph()
-    prev = None
-    for i, (th, dur, gap) in enumerate(items):
-        t = g.add_task(mk(f"t{i}", th, dur=dur, gap=gap))
-        if prev is not None and i % 3 == 0:
-            g.add_edge(prev, t)
-        prev = t
-    r = simulate(g)
-    assert len(r.start) == len(g)
-    assert r.makespan >= g.critical_path() - 1e-6
-    assert r.makespan <= g.total_work() + 1e-6

@@ -1,0 +1,63 @@
+"""Hypothesis property tests for the simulator (paper Algorithm 1 bounds).
+
+Skipped when the optional ``hypothesis`` dev dependency is absent so the
+tier-1 suite collects on a clean machine.  Engine-vs-oracle equivalence tests
+that need no optional dependency live in ``test_engine_equivalence.py``.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.core import DependencyGraph, Task, TaskKind, simulate
+from repro.core.simulate import simulate_reference
+
+
+def mk(name, thread, dur=1.0, gap=0.0):
+    return Task(name=name, kind=TaskKind.COMPUTE, thread=thread,
+                duration=dur, gap=gap)
+
+
+@hypothesis.given(st.lists(st.tuples(st.sampled_from(["device", "host",
+                                                      "ici:x"]),
+                                     st.floats(0.01, 5.0),
+                                     st.floats(0.0, 1.0)),
+                           min_size=1, max_size=30))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_property_bounds(items):
+    """critical path <= makespan <= total work, executed == all tasks."""
+    g = DependencyGraph()
+    prev = None
+    for i, (th, dur, gap) in enumerate(items):
+        t = g.add_task(mk(f"t{i}", th, dur=dur, gap=gap))
+        if prev is not None and i % 3 == 0:
+            g.add_edge(prev, t)
+        prev = t
+    r = simulate(g)
+    assert len(r.start) == len(g)
+    assert r.makespan >= g.critical_path() - 1e-6
+    assert r.makespan <= g.total_work() + 1e-6
+
+
+@hypothesis.given(st.lists(st.tuples(st.sampled_from(["device", "host",
+                                                      "ici:x", "ici:y"]),
+                                     st.floats(0.01, 5.0),
+                                     st.floats(0.0, 1.0)),
+                           min_size=1, max_size=40),
+                  st.integers(2, 7))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_event_engine_matches_reference(items, stride):
+    """The heap engine and the legacy loop agree on starts and makespan."""
+    g = DependencyGraph()
+    prev = None
+    for i, (th, dur, gap) in enumerate(items):
+        t = g.add_task(mk(f"t{i}", th, dur=dur, gap=gap))
+        if prev is not None and i % stride == 0:
+            g.add_edge(prev, t)
+        prev = t
+    fast = simulate(g)
+    slow = simulate_reference(g)
+    assert fast.makespan == pytest.approx(slow.makespan, abs=1e-9)
+    for uid, s in slow.start.items():
+        assert fast.start[uid] == pytest.approx(s, abs=1e-9)

@@ -127,8 +127,8 @@ class TestCheckpoint:
         n = len(jax.devices())
         tree = {"w": jnp.arange(16.0).reshape(4, 4)}
         save_checkpoint(str(tmp_path), 0, tree)
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((1,), ("data",))
         sh = {"w": NamedSharding(mesh, P("data", None))}
         out, _ = restore_checkpoint(str(tmp_path), tree, shardings=sh)
         np.testing.assert_array_equal(np.asarray(out["w"]),
@@ -193,9 +193,9 @@ class TestSharding:
         assert all(s is None for s in spec)
 
     def test_rules_under_mesh(self):
-        mesh = jax.make_mesh((1,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
-        with jax.set_mesh(mesh):
+        from repro.compat import make_mesh, set_mesh
+        mesh = make_mesh((1,), ("model",))
+        with set_mesh(mesh):
             rules = ShardingRules()
             spec = rules.spec("batch", "heads", dim_sizes=[4, 4])
             # model axis size 1 -> nothing shardable but no error
