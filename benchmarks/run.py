@@ -20,6 +20,7 @@ BENCHES = {
     "table1_coverage": "benchmarks.bench_coverage",
     "roofline": "benchmarks.bench_roofline",
     "sim_engine": "benchmarks.bench_sim",
+    "sweep_reuse": "benchmarks.bench_sweep",
 }
 
 

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
-from repro.core import trace_compiled, whatif
+from repro.core import Scenario, trace_compiled, get_optimization
 from repro.data import make_batch
 from repro.models import build_model, make_train_step
 from repro.optim import AdamW
@@ -37,19 +37,29 @@ print(f"\nbaseline simulated step: {base.makespan*1e3:.3f} ms "
 print("breakdown:", {k: f"{v*1e3:.2f}ms" for k, v in base.breakdown.items()})
 
 # ------------------------------------------------- 4. what-if questions
-amp = whatif.what_if_amp(bundle.graph).simulate()
-print(f"What if mixed precision?      {base.makespan/amp.makespan:.2f}x")
-
-fused = whatif.what_if_fused_optimizer(bundle.graph,
-                                       bundle.cost).simulate()
-print(f"What if a fused optimizer?    {base.makespan/fused.makespan:.2f}x")
-
+# One Scenario carries the graph, cost model, gradient bytes, and worker
+# count; registered optimizations are named, typed, and stack with `|`.
 grads = {f"layer{i}": 5e6 for i in range(cfg.n_layers)}
-dist = whatif.what_if_distributed(bundle.graph, grads, num_workers=16)
-dm = dist.simulate()
-print(f"What about 16-way data parallel?  step becomes "
-      f"{dm.makespan/base.makespan:.2f}x the single-worker step")
+scenario = Scenario(bundle.graph, cost=bundle.cost,
+                    layer_grad_bytes=grads, workers=16)
 
-bw2 = whatif.what_if_bandwidth(dist.graph, 2.0).simulate()
-print(f"...and with 2x network bandwidth? {dm.makespan/bw2.makespan:.2f}x "
+amp = scenario.predict("amp")
+print(f"What if mixed precision?      {amp.speedup:.2f}x")
+
+fused = scenario.predict("fused_optimizer")
+print(f"What if a fused optimizer?    {fused.speedup:.2f}x")
+
+ddp = get_optimization("ddp")()
+dm = scenario.predict(ddp)
+print(f"What about 16-way data parallel?  step becomes "
+      f"{dm.predicted/dm.baseline:.2f}x the single-worker step")
+
+# stacks compose left-to-right: DDP's all-reduces, then 2x faster links
+bw2 = scenario.predict(ddp | get_optimization("bandwidth")(factor=2.0))
+print(f"...and with 2x network bandwidth? {dm.predicted/bw2.predicted:.2f}x "
       f"faster than that")
+
+# a parameter sweep is one call — no manual re-chaining per point
+for pred in scenario.sweep("ddp", {"bucket_bytes": [1e6, 25e6, 100e6]}):
+    print(f"...bucket {pred.point['bucket_bytes']/1e6:5.1f} MB: "
+          f"{pred.predicted*1e3:.3f} ms/step")

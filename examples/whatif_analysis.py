@@ -1,15 +1,20 @@
 """The paper's full workflow on one model: trace once, model ten optimizations.
 
-Reproduces the Table-1 coverage claim: every optimization family the paper
-models, expressed in a few lines of graph-transformation primitives, plus the
-Fig. 8-style distributed scaling sweep — all from ONE single-device profile.
+Reproduces the Table-1 coverage claim through the *unified* what-if API
+(repro.core.optimize): every optimization family the paper models is a
+registered, typed, composable `Optimization`.  One `Scenario` carries the
+traced graph, the cost model, and the per-layer byte maps, so each what-if
+is a one-liner — `scenario.predict("amp")` — stacks compose with `|`, and
+parameter grids run through `Scenario.sweep`, which reuses one ClusterGraph
+build across sweep points instead of rebuilding per point.
 
     PYTHONPATH=src python examples/whatif_analysis.py [--arch tinyllama-1.1b]
 """
 
 import argparse
 
-from repro.core import whatif, simulate
+from repro.core import Scenario, WorkerSpec, get_optimization
+from repro.core.optimize import uniform_bandwidth_specs
 
 import sys
 import os
@@ -25,45 +30,65 @@ def main() -> None:
     bundle = traced_train(args.arch)
     grads = layer_grad_bytes(args.arch)
     acts = {l: 2e6 for l in grads}
-    g = bundle.graph
-    base = bundle.simulate().makespan
-    print(f"{args.arch}: baseline {base*1e3:.3f} ms, {len(g)} tasks, "
-          f"{len(grads)} mapped layers\n")
 
+    # One scenario object replaces the per-function kwarg threading: graph,
+    # cost model, byte maps, and the worker spec live in one place.
+    scenario = Scenario(bundle.graph, cost=bundle.cost,
+                        layer_grad_bytes=grads, activation_bytes=acts,
+                        workers=16)
+    base = scenario.baseline().makespan
+    print(f"{args.arch}: baseline {base*1e3:.3f} ms, "
+          f"{len(bundle.graph)} tasks, {len(grads)} mapped layers\n")
+
+    # single-graph what-ifs: each entry is a registry spec string
     print(f"{'optimization':28s} {'predicted':>10s}")
-    rows = [
-        ("AMP (mixed precision)", whatif.what_if_amp(g)),
-        ("FusedAdam", whatif.what_if_fused_optimizer(g, bundle.cost)),
-        ("Fused norm (ReconBN)", whatif.what_if_fused_norm(g)),
-        ("MetaFlow scale attn 0.7", whatif.what_if_scale_layer(g, "attn", 0.7)),
-        ("Gist (encode/decode)", whatif.what_if_gist(g, "layer", acts)),
-        ("vDNN (offload)", whatif.what_if_offload(g, "layer", acts)),
+    singles = [
+        ("AMP (mixed precision)", "amp"),
+        ("FusedAdam", "fused_optimizer"),
+        ("Fused norm (ReconBN)", "fused_norm"),
+        ("MetaFlow scale attn 0.7", "scale_layer:layer_pattern=attn:scale=0.7"),
+        ("Gist (encode/decode)", "gist:layer_pattern=layer"),
+        ("vDNN (offload)", "offload:layer_pattern=layer"),
     ]
-    for name, tf in rows:
-        s = base / tf.simulate().makespan
-        print(f"{name:28s} {s:9.2f}x")
+    for name, spec in singles:
+        print(f"{name:28s} {scenario.predict(spec).speedup:9.2f}x")
 
-    dist = whatif.what_if_distributed(g, grads, 16).graph
-    dbase = simulate(dist).makespan
+    # distributed what-ifs: DDP composes with each follow-on via `|` — the
+    # stack applies left to right on one transform, no manual graph chaining
+    ddp = get_optimization("ddp")()
+    dbase = scenario.predict(ddp).predicted
     print(f"\n16-worker DP baseline: {dbase*1e3:.3f} ms")
-    rows = [
-        ("DGC 1% compression", whatif.what_if_dgc(dist, compression=0.01)),
-        ("BlueConnect 4x4", whatif.what_if_blueconnect(
-            dist, [("data", 4), ("model", 4)])),
-        ("ZeRO opt-sharding", whatif.what_if_zero(dist, 16)),
-        ("Async collectives", whatif.what_if_overlap_collectives(dist)),
-        ("2x bandwidth", whatif.what_if_bandwidth(dist, 2.0)),
-        ("Straggler 1.5x", whatif.what_if_straggler(dist)),
+    stacked = [
+        ("DGC 1% compression", "dgc:compression=0.01"),
+        ("BlueConnect 4x4", "blueconnect:axes=[('data',4),('model',4)]"),
+        ("ZeRO opt-sharding", "zero"),
+        ("Async collectives", "overlap"),
+        ("2x bandwidth", "bandwidth:factor=2.0"),
+        ("Straggler 1.5x", "straggler"),
     ]
-    for name, tf in rows:
-        s = dbase / tf.simulate().makespan
-        print(f"{name:28s} {s:9.2f}x")
+    for name, spec in stacked:
+        pred = scenario.predict(f"ddp,{spec}")
+        print(f"{name:28s} {dbase / pred.predicted:9.2f}x")
 
+    # scaling sweep (Fig. 8 style): one grid over the scenario's worker count
     print("\nscaling sweep (Fig. 8 style):")
-    for w in (2, 4, 8, 16, 32, 64):
-        m = whatif.what_if_distributed(g, grads, w).simulate().makespan
-        print(f"  {w:3d} workers: step {m*1e3:9.3f} ms "
+    for pred in scenario.sweep("ddp", {"workers": [2, 4, 8, 16, 32, 64]}):
+        m = pred.predicted
+        print(f"  {pred.point['workers']:3d} workers: step {m*1e3:9.3f} ms "
               f"({m/base:.2f}x single)")
+
+    # cluster bandwidth sweep: 6 points, ONE ClusterGraph build — each point
+    # retunes the ring-leg durations in place (ClusterGraph.retune) and
+    # re-simulates, with a per-worker breakdown available on every point
+    cluster = Scenario(bundle.graph, cost=bundle.cost,
+                       layer_grad_bytes=grads,
+                       workers=[WorkerSpec() for _ in range(8)])
+    scales = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0]
+    grid = {"workers": uniform_bandwidth_specs(8, scales)}
+    print("\ncluster bandwidth sweep (8 workers, one graph build):")
+    for s, pred in zip(scales, cluster.sweep("ddp", grid)):
+        print(f"  {s:5.2f}x links: step {pred.predicted*1e3:9.3f} ms, "
+              f"straggler w{pred.cluster.straggler()}")
 
 
 if __name__ == "__main__":

@@ -7,7 +7,14 @@ Public surface:
         Task, TaskKind, DependencyGraph, simulate, GraphTransform,
         trace_compiled, trace_measured, CostModel, whatif,
         ClusterGraph, WorkerSpec,          # N-worker global-graph simulation
+        Optimization, Scenario, Stack, Prediction,   # unified what-if API
+        register, get_optimization,        # the optimization registry
     )
+
+The unified what-if API (:mod:`repro.core.optimize`) is the preferred
+surface: optimizations are registered, typed, composable via ``|``, and
+``Scenario.sweep`` evaluates parameter grids reusing one ClusterGraph
+build.  The ``whatif.what_if_*`` functions remain as thin wrappers.
 
 Simulation engines: :func:`simulate` is the O(E log V) event-driven heap
 engine; :func:`simulate_reference` keeps the paper's Algorithm 1 frontier
@@ -31,6 +38,10 @@ from .hlo import parse_hlo_module, extract_graph, aggregate_costs, split_op_name
 from .layermap import LayerMap, LayerProfile, bucket_layers
 from .trace import (TraceBundle, trace_compiled, trace_measured,
                     measure_wallclock, lower_and_compile)
+from .optimize import (Optimization, OptimizationError, Prediction, Scenario,
+                       Stack, available, get_optimization, greedy_search,
+                       parse_stack, register)
+from . import optimize
 from . import whatif
 
 __all__ = [
@@ -48,5 +59,8 @@ __all__ = [
     "LayerMap", "LayerProfile", "bucket_layers",
     "TraceBundle", "trace_compiled", "trace_measured", "measure_wallclock",
     "lower_and_compile",
-    "whatif",
+    "Optimization", "OptimizationError", "Prediction", "Scenario", "Stack",
+    "available", "get_optimization", "greedy_search", "parse_stack",
+    "register",
+    "optimize", "whatif",
 ]

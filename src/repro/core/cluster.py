@@ -50,7 +50,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .costmodel import CollectiveModel, CostModel
 from .graph import DependencyGraph, GraphError
@@ -95,12 +95,26 @@ def _as_specs(workers: Union[int, Sequence[WorkerSpec]]) -> List[WorkerSpec]:
 
 @dataclasses.dataclass
 class ClusterResult:
-    """Global simulation outcome plus the per-worker breakdown."""
+    """Global simulation outcome plus the per-worker breakdown.
+
+    ``per_worker`` is computed lazily on first access: a sweep that only
+    reads global makespans (``Scenario.sweep`` points) never pays for
+    projecting the global result onto every worker's local resources.
+    """
 
     makespan: float
     global_result: SimResult
-    per_worker: Dict[int, SimResult]
     workers: List[WorkerSpec]
+    _per_worker: Optional[Dict[int, SimResult]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
+    _split_fn: Optional[Callable[[], Dict[int, SimResult]]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
+
+    @property
+    def per_worker(self) -> Dict[int, SimResult]:
+        if self._per_worker is None:
+            self._per_worker = self._split_fn() if self._split_fn else {}
+        return self._per_worker
 
     def speedup_over(self, other: "ClusterResult") -> float:
         return (other.makespan / self.makespan
@@ -118,11 +132,17 @@ class ClusterGraph:
     """A global N-worker dependency graph built from a single-worker profile."""
 
     def __init__(self, graph: DependencyGraph, workers: List[WorkerSpec],
-                 cost: CostModel, schedule: Optional[ScheduleFn] = None) -> None:
+                 cost: CostModel, schedule: Optional[ScheduleFn] = None,
+                 collective_mode: str = "ring") -> None:
         self.graph = graph
         self.workers = workers
         self.cost = cost
         self.schedule = schedule
+        self.collective_mode = collective_mode
+        # provenance records for :meth:`retune` — (kind, task, worker,
+        # *base values); tasks later detached from the graph are skipped.
+        self._prov: List[Tuple] = []
+        self._tasks_by_worker: Optional[Dict[int, List[Task]]] = None
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -148,6 +168,7 @@ class ClusterGraph:
         base_tasks = base.tasks()
 
         # 1. replicate: clone every task per worker, scale compute durations.
+        cg = cls(g, specs, cost, schedule, collective_mode)
         replicas: List[Dict[int, Task]] = []
         for i, spec in enumerate(specs):
             remap: Dict[int, Task] = {}
@@ -159,21 +180,24 @@ class ClusterGraph:
                     if t.kind == TaskKind.COLLECTIVE:
                         nt.duration = t.duration / max(spec.bandwidth_scale,
                                                        1e-12)
+                        cg._prov.append(("coll", nt, i, t.duration))
                     else:
                         nt.duration = t.duration * spec.compute_scale
                         nt.gap = t.gap * spec.compute_scale
+                        cg._prov.append(("compute", nt, i, t.duration, t.gap))
                     g.add_task(nt, link_lane=False)
                     remap[uid] = nt
             for t in base_tasks:
                 for c in base.children(t):
                     g.add_edge(remap[t.uid], remap[c.uid])
             replicas.append(remap)
-
-        cg = cls(g, specs, cost, schedule)
         if n > 1:
             cg._link_collectives(base, replicas, collective_mode)
             cg._link_push_pull(base, replicas)
         g.validate()
+        # collective wiring detached some replica tasks: prune their records
+        # once so retune() does no per-call membership checks
+        cg._prov = [r for r in cg._prov if r[1] in g]
         return cg
 
     # ------------------------------------------------------- collective wiring
@@ -188,6 +212,13 @@ class ClusterGraph:
         # floor like every other scale use: a 0.0 scale (dead NIC) models as
         # an astronomically slow link rather than a ZeroDivisionError
         return bw * max(min(wi.bandwidth_scale, wj.bandwidth_scale), 1e-12)
+
+    def _leg_duration(self, i: int, payload: float) -> float:
+        """One ring-leg's time for worker i — shared by build and retune so
+        a retuned sweep point is bit-identical to a fresh build."""
+        n = len(self.workers)
+        return ((payload / n) / self._link_bandwidth(i, (i + 1) % n)
+                + CollectiveModel.HOP_LATENCY)
 
     def _detach(self, task: Task) -> Tuple[List[Task], List[Task]]:
         """Remove ``task`` keeping (parents, children) for re-wiring."""
@@ -228,12 +259,11 @@ class ClusterGraph:
         n = len(replicas)
         rounds = _RING_ROUNDS[c.attrs["collective"]] * (n - 1)
         payload = max(c.comm_bytes, 0.0)
-        hop = CollectiveModel.HOP_LATENCY
         legs: List[List[Task]] = []
         for i, remap in enumerate(replicas):
             rc = remap[c.uid]
             parents, children = self._detach(rc)
-            leg_dur = (payload / n) / self._link_bandwidth(i, (i + 1) % n) + hop
+            leg_dur = self._leg_duration(i, payload)
             worker_legs: List[Task] = []
             prev: Optional[Task] = None
             for k in range(rounds):
@@ -242,6 +272,7 @@ class ClusterGraph:
                 leg.duration = leg_dur
                 leg.comm_bytes = payload / n
                 leg.attrs = dict(c.attrs, ring_round=k)
+                self._prov.append(("ring", leg, i, payload))
                 self.graph.add_task(leg, link_lane=False)
                 for p in (parents if prev is None else [prev]):
                     self.graph.add_edge(p, leg)
@@ -370,20 +401,86 @@ class ClusterGraph:
                 for v in pulls:
                     self.graph.add_edge(bar, remap[v.uid])
 
+    # --------------------------------------------------------------- retune
+    @property
+    def retunable(self) -> bool:
+        """Whether :meth:`retune` can re-parameterize this build in place.
+
+        Ring and fused collective wiring is duration-only under a worker
+        spec change; the hierarchical (BlueConnect) decomposition's stage
+        *structure* depends on the pod layout, so it needs a rebuild.
+        """
+        return self.collective_mode != "hierarchical"
+
+    def retune(self, workers: Union[int, Sequence[WorkerSpec]]
+               ) -> "ClusterGraph":
+        """Re-parameterize this build for new same-length worker specs.
+
+        Recomputes every scaled duration (compute/gap by ``compute_scale``,
+        replica collectives by ``bandwidth_scale``, ring legs from the link
+        bandwidths) from the recorded base values — the same expressions
+        :meth:`build` used, so the result is bit-identical to a fresh build
+        with ``workers``.  This is what lets :meth:`Scenario.sweep
+        <repro.core.optimize.Scenario.sweep>` evaluate bandwidth/straggler
+        grids without re-replicating and re-wiring the global graph per
+        point.
+        """
+        specs = _as_specs(workers)
+        if len(specs) != len(self.workers):
+            raise GraphError(
+                f"retune needs the same worker count (have "
+                f"{len(self.workers)}, got {len(specs)}); rebuild instead")
+        if not self.retunable:
+            raise GraphError(
+                "hierarchical cluster graphs cannot be retuned (stage "
+                "structure depends on the pod layout); rebuild instead")
+        self.workers = specs
+        leg_dur: Dict[Tuple[int, float], float] = {}   # (worker, payload)
+        for rec in self._prov:
+            kind, t = rec[0], rec[1]
+            if kind == "compute":
+                _, _, i, dur, gap = rec
+                t.duration = dur * specs[i].compute_scale
+                t.gap = gap * specs[i].compute_scale
+            elif kind == "coll":
+                _, _, i, dur = rec
+                t.duration = dur / max(specs[i].bandwidth_scale, 1e-12)
+            else:                   # ring leg
+                _, _, i, payload = rec
+                key = (i, payload)
+                d = leg_dur.get(key)
+                if d is None:
+                    d = leg_dur[key] = self._leg_duration(i, payload)
+                t.duration = d
+        return self
+
     # -------------------------------------------------------------- simulate
     def simulate(self, schedule: Optional[ScheduleFn] = None) -> ClusterResult:
         res = simulate(self.graph, schedule or self.schedule)
-        per_worker = self._split_result(res)
+        # snapshot durations/gaps: a later retune() (sweeps) must not bleed
+        # into this result's lazily-computed per-worker breakdown
+        snap = {t.uid: (t.duration, t.gap) for t in self.graph.tasks()}
         return ClusterResult(makespan=res.makespan, global_result=res,
-                             per_worker=per_worker, workers=self.workers)
+                             workers=list(self.workers),
+                             _split_fn=lambda: self._split_result(res, snap))
 
-    def _split_result(self, res: SimResult) -> Dict[int, SimResult]:
+    def _worker_partition(self) -> Dict[int, List[Task]]:
+        """Tasks grouped by worker, cached — the grouping only depends on
+        the graph's structure, which retune keeps fixed across sweeps."""
+        if self._tasks_by_worker is None:
+            by_worker: Dict[int, List[Task]] = collections.defaultdict(list)
+            for t in self.graph.tasks():
+                w, _ = split_worker_thread(t.thread)
+                if w is not None:
+                    by_worker[w].append(t)
+            self._tasks_by_worker = dict(by_worker)
+        return self._tasks_by_worker
+
+    def _split_result(self, res: SimResult,
+                      snap: Dict[int, Tuple[float, float]]
+                      ) -> Dict[int, SimResult]:
         """Project the global result onto each worker's local resources."""
-        tasks_by_worker: Dict[int, List[Task]] = collections.defaultdict(list)
-        for t in self.graph.tasks():
-            w, _ = split_worker_thread(t.thread)
-            if w is not None:
-                tasks_by_worker[w].append(t)
+        tasks_by_worker = self._worker_partition()
         out: Dict[int, SimResult] = {}
         for i in range(len(self.workers)):
             ts = tasks_by_worker.get(i, [])
@@ -394,11 +491,12 @@ class ClusterGraph:
                 collections.defaultdict(list)
             makespan = 0.0
             for t in ts:
+                duration, gap = snap[t.uid]
                 local = split_worker_thread(t.thread)[1]
-                busy[local] += t.duration
-                if t.duration > 0:
+                busy[local] += duration
+                if duration > 0:
                     intervals[local].append((start[t.uid], finish[t.uid]))
-                makespan = max(makespan, finish[t.uid] + t.gap)
+                makespan = max(makespan, finish[t.uid] + gap)
             breakdown = _host_device_breakdown(
                 intervals, makespan, lambda th: th == HOST_THREAD)
             out[i] = SimResult(makespan=makespan, start=start, finish=finish,

@@ -1,0 +1,1274 @@
+"""Unified optimization / scenario API: composable what-ifs over one registry.
+
+Daydream's promise is that optimizations are *graph-transformation
+primitives* practitioners can stack and compare (paper §4.4, §5).  This
+module is the one entry point for that promise:
+
+* :class:`Optimization` — a named, typed-parameter graph transformation
+  (``apply(scenario) -> GraphTransform``).  Every modeled optimization is a
+  frozen dataclass registered under a string name via :func:`register`, so
+  CLIs and search drivers construct them from ``name:param=value`` specs
+  (:func:`parse_stack`).
+* :class:`Scenario` — the context an optimization is evaluated in: the
+  baseline graph, :class:`~repro.core.costmodel.CostModel`, per-layer
+  gradient/activation byte maps, and a worker spec.  Per-optimization
+  kwargs (``layer_grad_bytes`` here, ``activation_bytes`` there,
+  ``num_workers`` vs ``workers``) are no longer threaded by hand.
+* :class:`Stack` / the ``|`` operator — composition with well-defined
+  ordering: ``A | B`` applies A to the baseline, then B to A's output
+  (left-to-right).  Stacks flatten, so composition is associative.
+* :class:`Prediction` — the unified result: baseline/predicted makespan,
+  ``speedup``, and (on the cluster route) the per-worker
+  :class:`~repro.core.cluster.ClusterResult` breakdown.
+* :meth:`Scenario.sweep` — parameter-grid evaluation (bandwidth scales,
+  straggler slowdowns, bucket sizes, worker counts) that reuses one
+  :class:`~repro.core.cluster.ClusterGraph` build and one base-graph copy
+  across points (via :meth:`ClusterGraph.retune`) instead of rebuilding
+  per point.
+
+Cluster routing is decided by the scenario's worker spec, not by which
+function you called: ``workers=N`` (an int) takes the paper's analytical
+single-graph route (collective costs spliced into one timeline), while
+``workers=[WorkerSpec(...), ...]`` routes through the dPRO-style global
+:class:`ClusterGraph` and yields a per-worker breakdown.
+
+Paper-algorithm -> registered-name map (Algorithms 3-12, §5 + Appendix A):
+
+    ======  =======================  ===============================
+    Alg  3  AMP                      ``amp``
+    Alg  4  FusedAdam                ``fused_optimizer`` / ``fusedadam``
+    Alg  5  Reconstructing BN        ``fused_norm``
+    Alg  6  DDP insertion            ``ddp`` / ``distributed``
+    Alg  7  P3                       ``p3``
+    Alg  8  BlueConnect              ``blueconnect``
+    Alg  9  MetaFlow                 ``remove_layer``, ``scale_layer``
+    Alg 10  vDNN                     ``offload`` / ``vdnn``
+    Alg 11  Gist                     ``gist``
+    Alg 12  DGC                      ``dgc``
+    beyond  ZeRO sharding            ``zero``
+    beyond  async collectives        ``overlap`` / ``overlap_collectives``
+    beyond  straggler                ``straggler``
+    beyond  bandwidth scaling        ``bandwidth``
+    beyond  gradient accumulation    ``grad_accum``
+    ======  =======================  ===============================
+
+The legacy ``repro.core.whatif.what_if_*`` / ``cluster_what_if_*`` functions
+are thin wrappers over these registered optimizations.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import itertools
+import math
+import typing
+from typing import (Any, Callable, ClassVar, Dict, List, Optional, Sequence,
+                    Tuple, Union)
+
+from .cluster import ClusterGraph, ClusterResult, WorkerSpec, _as_specs
+from .costmodel import CollectiveModel, CostModel
+from .graph import DependencyGraph
+from .layermap import bucket_layers
+from .simulate import SimResult, simulate
+from .task import (Task, TaskKind, DEVICE_STREAM, DMA_CHANNEL, HOST_THREAD,
+                   ici_channel)
+from .transform import (GraphTransform, all_of, by_layer, by_name, by_phase,
+                        on_device)
+
+GRAD_CHANNEL = ici_channel("grad")
+
+# Scenario fields a CLI stack spec / sweep grid may override per point.
+_SCENARIO_OVERRIDES = ("workers", "collective_mode")
+
+
+class OptimizationError(ValueError):
+    """Bad optimization name, parameter, or scenario for the optimization."""
+
+
+# ============================================================== registry
+_REGISTRY: Dict[str, type] = {}
+
+
+def register(name: str, *aliases: str, algorithm: str = ""
+             ) -> Callable[[type], type]:
+    """Class decorator: register an :class:`Optimization` under ``name``.
+
+    ``algorithm`` records the paper-algorithm label for docs/reports.
+    """
+    def deco(cls: type) -> type:
+        cls.name = name
+        cls.algorithm = algorithm
+        for n in (name,) + aliases:
+            key = n.lower()
+            if key in _REGISTRY:
+                raise OptimizationError(f"duplicate optimization name {n!r}")
+            _REGISTRY[key] = cls
+        return cls
+    return deco
+
+
+def get_optimization(name: str) -> type:
+    """Look up a registered :class:`Optimization` class by name or alias."""
+    cls = _REGISTRY.get(name.lower())
+    if cls is None:
+        raise OptimizationError(
+            f"unknown optimization {name!r}; available: "
+            f"{', '.join(available())}")
+    return cls
+
+
+def available() -> List[str]:
+    """Primary (non-alias) registered optimization names, sorted."""
+    return sorted({cls.name for cls in _REGISTRY.values()})
+
+
+# ============================================================== scenario
+@dataclasses.dataclass
+class Scenario:
+    """Everything an optimization needs to be evaluated, in one object.
+
+    ``workers`` decides the routing: an ``int`` keeps the paper's analytical
+    single-graph route; a sequence of :class:`WorkerSpec` routes through the
+    global :class:`ClusterGraph` (per-worker breakdown, heterogeneous
+    clusters, ``collective_mode`` selectable).
+    """
+
+    graph: DependencyGraph
+    cost: Optional[CostModel] = None
+    layer_grad_bytes: Optional[Dict[str, float]] = None
+    activation_bytes: Optional[Dict[str, float]] = None
+    workers: Union[int, Sequence[WorkerSpec]] = 1
+    collective_mode: str = "ring"
+
+    _baseline: Optional[SimResult] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    def __post_init__(self) -> None:
+        if self.cost is None:
+            self.cost = CostModel()
+
+    # ------------------------------------------------------------ routing
+    @property
+    def is_cluster(self) -> bool:
+        return not isinstance(self.workers, int)
+
+    @property
+    def specs(self) -> List[WorkerSpec]:
+        return _as_specs(self.workers)
+
+    @property
+    def num_workers(self) -> int:
+        return self.workers if isinstance(self.workers, int) \
+            else len(list(self.workers))
+
+    # ----------------------------------------------------------- accessors
+    @property
+    def grads(self) -> Dict[str, float]:
+        if self.layer_grad_bytes is None:
+            raise OptimizationError(
+                "this optimization needs Scenario.layer_grad_bytes "
+                "(per-layer gradient payload bytes)")
+        return self.layer_grad_bytes
+
+    @property
+    def acts(self) -> Dict[str, float]:
+        if self.activation_bytes is None:
+            raise OptimizationError(
+                "this optimization needs Scenario.activation_bytes "
+                "(per-layer activation bytes)")
+        return self.activation_bytes
+
+    def transform(self) -> GraphTransform:
+        """A fresh mutable what-if session over a copy of the baseline."""
+        return GraphTransform(self.graph)
+
+    def baseline(self) -> SimResult:
+        """Simulated baseline (single-worker profile), cached."""
+        if self._baseline is None:
+            self._baseline = simulate(self.graph)
+        return self._baseline
+
+    # ----------------------------------------------------------- evaluate
+    def predict(self, opt: Union[str, "Optimization"],
+                **params: Any) -> "Prediction":
+        """Apply ``opt`` (instance, name, or ``name:param=value`` spec) and
+        simulate; routing per the worker spec."""
+        pred, _, _ = self._evaluate(_resolve(opt, params))
+        return pred
+
+    def _evaluate(self, opt: "Optimization", *,
+                  baseline: Optional[float] = None,
+                  point: Optional[Dict[str, Any]] = None
+                  ) -> Tuple["Prediction", GraphTransform,
+                             Optional[ClusterGraph]]:
+        base = self.baseline().makespan if baseline is None else baseline
+        tf = opt.apply(self)
+        if self.is_cluster:
+            cg = ClusterGraph.build(tf.graph, self.specs, cost=self.cost,
+                                    collective_mode=self.collective_mode,
+                                    schedule=tf.schedule)
+            cres = cg.simulate()
+            return (Prediction(opt, base, cres.makespan, cres.global_result,
+                               cres, point or {}), tf, cg)
+        res = tf.simulate()
+        return Prediction(opt, base, res.makespan, res, None, point or {}), \
+            tf, None
+
+    # --------------------------------------------------------------- sweep
+    def sweep(self, opt: Union[str, "Optimization"],
+              grid: Union[Dict[str, Sequence[Any]],
+                          Sequence[Dict[str, Any]]],
+              *, reuse: bool = True) -> List["Prediction"]:
+        """Evaluate ``opt`` across a parameter grid.
+
+        ``grid`` maps names to value lists (evaluated as a cartesian
+        product) or is an explicit sequence of point dicts.  Keys are either
+        parameters of ``opt`` or the scenario fields ``workers`` /
+        ``collective_mode``.
+
+        With ``reuse=True`` (default) consecutive points share work instead
+        of rebuilding from scratch: on the cluster route, points that only
+        change worker specs (bandwidth scales, straggler slowdowns) retune
+        one :class:`ClusterGraph` build in place
+        (:meth:`ClusterGraph.retune` — exact, not approximate); on the
+        single-graph route, optimizations that support cheap
+        re-parameterization (:meth:`Optimization.retune`) rescale the
+        applied transform.  Structural changes (bucket sizes, worker
+        counts) fall back to a full rebuild for that point.
+        """
+        base_opt = _resolve(opt)
+        opt_names = set(base_opt.param_names())
+        points = _expand_grid(grid)
+        base = self.baseline().makespan
+        preds: List[Prediction] = []
+        cache: Dict[str, Any] = {"opt": None, "scn": None, "tf": None,
+                                 "cg": None}
+        for pt in points:
+            opt_params = {k: v for k, v in pt.items() if k in opt_names}
+            over = {k: v for k, v in pt.items()
+                    if k in _SCENARIO_OVERRIDES and k not in opt_names}
+            unknown = set(pt) - set(opt_params) - set(over)
+            if unknown:
+                raise OptimizationError(
+                    f"sweep grid key(s) {sorted(unknown)} are neither "
+                    f"parameters of {base_opt.name!r} "
+                    f"({sorted(opt_names)}) nor scenario fields "
+                    f"{list(_SCENARIO_OVERRIDES)}")
+            popt = base_opt.with_params(**opt_params)
+            scn = dataclasses.replace(self, **over) if over else self
+            pred = None
+            if reuse and cache["cg"] is not None \
+                    and self._cluster_reusable(popt, scn, cache):
+                cache["cg"].retune(scn.specs)
+                cres = cache["cg"].simulate()
+                pred = Prediction(popt, base, cres.makespan,
+                                  cres.global_result, cres, dict(pt))
+                cache["opt"], cache["scn"] = popt, scn
+            elif reuse and cache["tf"] is not None and not over \
+                    and scn is self and not scn.is_cluster \
+                    and type(popt) is type(cache["opt"]) \
+                    and popt.retune(scn, cache["tf"], cache["opt"]):
+                res = simulate(cache["tf"].graph, cache["tf"].schedule)
+                pred = Prediction(popt, base, res.makespan, res, None,
+                                  dict(pt))
+                cache["opt"] = popt
+            if pred is None:
+                pred, tf, cg = scn._evaluate(popt, baseline=base,
+                                             point=dict(pt))
+                if reuse:
+                    cache.update(opt=popt, scn=scn, tf=tf, cg=cg)
+            preds.append(pred)
+        return preds
+
+    def _cluster_reusable(self, popt: "Optimization", scn: "Scenario",
+                          cache: Dict[str, Any]) -> bool:
+        """Points differing only in same-length worker specs retune."""
+        prev = cache["scn"]
+        return (scn.is_cluster and prev is not None
+                and cache["cg"].retunable
+                and popt == cache["opt"]
+                and scn.graph is prev.graph
+                and scn.cost is prev.cost
+                and scn.layer_grad_bytes is prev.layer_grad_bytes
+                and scn.activation_bytes is prev.activation_bytes
+                and scn.collective_mode == prev.collective_mode
+                and len(scn.specs) == len(cache["cg"].workers))
+
+
+# ============================================================== prediction
+@dataclasses.dataclass
+class Prediction:
+    """Unified what-if outcome, identical across both routes.
+
+    ``baseline``/``predicted`` are makespans in seconds; ``cluster`` is the
+    per-worker :class:`ClusterResult` breakdown when the scenario routed
+    through the global cluster graph, else ``None``.
+    """
+
+    optimization: "Optimization"
+    baseline: float
+    predicted: float
+    result: SimResult
+    cluster: Optional[ClusterResult] = None
+    point: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def speedup(self) -> float:
+        return (self.baseline / self.predicted if self.predicted > 0
+                else float("inf"))
+
+    def __repr__(self) -> str:
+        tag = f" point={self.point}" if self.point else ""
+        return (f"Prediction({self.optimization.spec()}: "
+                f"{self.baseline*1e3:.3f}ms -> {self.predicted*1e3:.3f}ms, "
+                f"{self.speedup:.2f}x{tag})")
+
+
+# ============================================================ optimization
+class Optimization:
+    """A named graph transformation with typed parameters.
+
+    Subclasses are frozen dataclasses (fields == parameters) registered via
+    :func:`register`; they implement :meth:`build`, which mutates a
+    :class:`GraphTransform` in place — that is what makes stacking
+    composable (every optimization in a :class:`Stack` mutates the same
+    transform, in order).
+    """
+
+    name: ClassVar[str] = "?"
+    algorithm: ClassVar[str] = ""
+
+    # ------------------------------------------------------------ protocol
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        raise NotImplementedError
+
+    def apply(self, scenario: Scenario,
+              tf: Optional[GraphTransform] = None) -> GraphTransform:
+        """Apply to (a copy of) the scenario's baseline graph."""
+        if tf is None:
+            tf = scenario.transform()
+        self.build(scenario, tf)
+        return tf
+
+    def predict(self, scenario: Scenario) -> Prediction:
+        return scenario.predict(self)
+
+    def retune(self, s: Scenario, tf: GraphTransform,
+               old: "Optimization") -> bool:
+        """Cheaply re-parameterize ``tf`` (already built with ``old``'s
+        params) to this instance's params, in place.  Return ``False`` when
+        the change is structural and needs a rebuild (the default)."""
+        return False
+
+    # ---------------------------------------------------------- parameters
+    def param_names(self) -> Tuple[str, ...]:
+        return tuple(f.name for f in dataclasses.fields(self))
+
+    def with_params(self, **params: Any) -> "Optimization":
+        if not params:
+            return self
+        bad = [k for k in params if k not in self.param_names()]
+        if bad:
+            raise OptimizationError(
+                f"{self.name} has no parameter(s) {bad}; valid: "
+                f"{list(self.param_names())}")
+        return dataclasses.replace(self, **params)
+
+    # -------------------------------------------------------- composition
+    def __or__(self, other: "Optimization") -> "Stack":
+        if not isinstance(other, Optimization):
+            return NotImplemented
+        return Stack(self, other)
+
+    # --------------------------------------------------------------- spec
+    def spec(self) -> str:
+        """``name:param=value`` round-trip form (:func:`parse_stack`)."""
+        parts = [self.name]
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            parts.append(f"{f.name}={v!r}")
+        return ":".join(parts)
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class Stack(Optimization):
+    """Ordered composition: ``Stack(A, B)`` applies A, then B to A's output.
+
+    Nested stacks flatten on construction, so ``(A | B) | C == A | (B | C)``
+    — composition is associative by construction.
+    """
+
+    opts: Tuple[Optimization, ...]
+
+    name: ClassVar[str] = "stack"
+
+    def __init__(self, *opts: Union[Optimization,
+                                    Sequence[Optimization]]) -> None:
+        flat: List[Optimization] = []
+        for o in opts:
+            if isinstance(o, Stack):
+                flat.extend(o.opts)
+            elif isinstance(o, Optimization):
+                flat.append(o)
+            else:
+                for x in o:
+                    flat.extend(x.opts if isinstance(x, Stack) else [x])
+        object.__setattr__(self, "opts", tuple(flat))
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        for o in self.opts:
+            o.build(s, tf)
+
+    def param_names(self) -> Tuple[str, ...]:
+        return ()
+
+    def with_params(self, **params: Any) -> "Optimization":
+        if params:
+            raise OptimizationError(
+                "cannot set parameters on a Stack; parameterize its members")
+        return self
+
+    def spec(self) -> str:
+        return ",".join(o.spec() for o in self.opts)
+
+
+# ================================================================ parsing
+def _split_outside(s: str, sep: str) -> List[str]:
+    """Split on ``sep`` outside brackets/quotes (so ``axes=[("d",4)]`` and
+    stacked specs coexist)."""
+    out, cur, depth, quote = [], [], 0, None
+    for ch in s:
+        if quote:
+            cur.append(ch)
+            if ch == quote:
+                quote = None
+        elif ch in "\"'":
+            quote = ch
+            cur.append(ch)
+        elif ch in "([{":
+            depth += 1
+            cur.append(ch)
+        elif ch in ")]}":
+            depth -= 1
+            cur.append(ch)
+        elif ch == sep and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    out.append("".join(cur))
+    return [p.strip() for p in out if p.strip()]
+
+
+def _parse_value(v: str) -> Any:
+    if v in ("true", "True"):
+        return True
+    if v in ("false", "False"):
+        return False
+    try:
+        return ast.literal_eval(v)
+    except (ValueError, SyntaxError):
+        return v
+
+
+def _coerce(value: Any, hint: Any) -> Any:
+    """Nudge CLI-parsed values toward the declared parameter type."""
+    if hint is None:
+        return value
+    origin = typing.get_origin(hint)
+    if origin is Union:
+        args = [a for a in typing.get_args(hint) if a is not type(None)]
+        hint = args[0] if len(args) == 1 else None
+    if hint is float and isinstance(value, (int, bool)):
+        return float(value)
+    if hint is int and isinstance(value, float) and value.is_integer():
+        return int(value)
+    return value
+
+
+def parse_stack(spec: str) -> Tuple[Optimization, Dict[str, Any]]:
+    """Parse a CLI stack spec like ``"amp,ddp:workers=16,zero"``.
+
+    Comma-separated optimizations, colon-separated ``param=value`` pairs
+    parsed against the registry (typed via each optimization's dataclass
+    fields).  Keys that are :class:`Scenario` fields (``workers``,
+    ``collective_mode``) are collected into the returned override dict
+    instead.  Returns ``(optimization_or_stack, scenario_overrides)``.
+    """
+    opts: List[Optimization] = []
+    overrides: Dict[str, Any] = {}
+    for part in _split_outside(spec, ","):
+        fields = _split_outside(part, ":")
+        name, kvs = fields[0], fields[1:]
+        cls = get_optimization(name)
+        try:
+            hints = typing.get_type_hints(cls)
+        except Exception:
+            hints = {}
+        valid = {f.name for f in dataclasses.fields(cls)}
+        params: Dict[str, Any] = {}
+        for kv in kvs:
+            if "=" not in kv:
+                raise OptimizationError(
+                    f"bad parameter {kv!r} in {part!r}; expected name=value")
+            k, v = kv.split("=", 1)
+            k, val = k.strip(), _parse_value(v.strip())
+            if k in valid:
+                params[k] = _coerce(val, hints.get(k))
+            elif k in _SCENARIO_OVERRIDES:
+                overrides[k] = val
+            else:
+                raise OptimizationError(
+                    f"{cls.name} has no parameter {k!r}; valid: "
+                    f"{sorted(valid)} (or scenario overrides "
+                    f"{list(_SCENARIO_OVERRIDES)})")
+        try:
+            opts.append(cls(**params))
+        except TypeError as e:
+            raise OptimizationError(
+                f"cannot construct {cls.name!r} from {part!r}: {e}") from e
+    if not opts:
+        raise OptimizationError(f"empty stack spec {spec!r}")
+    return (opts[0] if len(opts) == 1 else Stack(*opts)), overrides
+
+
+def _resolve(opt: Union[str, Optimization],
+             params: Optional[Dict[str, Any]] = None) -> Optimization:
+    if isinstance(opt, str):
+        if "," in opt or ":" in opt:
+            stack, over = parse_stack(opt)
+            if over:
+                raise OptimizationError(
+                    f"scenario overrides {sorted(over)} are not allowed in "
+                    f"this context; set them on the Scenario")
+            if params:
+                raise OptimizationError(
+                    "pass parameters either in the spec string or as "
+                    "keyword arguments, not both")
+            return stack
+        cls = get_optimization(opt)
+        try:
+            return cls(**(params or {}))
+        except TypeError as e:
+            raise OptimizationError(
+                f"cannot construct {cls.name!r}: {e}") from e
+    if not isinstance(opt, Optimization):
+        raise OptimizationError(
+            f"expected an Optimization or registered name, got {opt!r}")
+    return opt.with_params(**params) if params else opt
+
+
+def _expand_grid(grid: Union[Dict[str, Sequence[Any]],
+                             Sequence[Dict[str, Any]]]
+                 ) -> List[Dict[str, Any]]:
+    if isinstance(grid, dict):
+        keys = list(grid)
+        return [dict(zip(keys, combo))
+                for combo in itertools.product(*(list(grid[k])
+                                                 for k in keys))]
+    return [dict(p) for p in grid]
+
+
+# ====================================================== worker-spec grids
+def uniform_bandwidth_specs(n: int, scales: Sequence[float]
+                            ) -> List[List[WorkerSpec]]:
+    """One sweep point per scale: all ``n`` workers' links throttled alike —
+    the ``workers`` grid for a cluster bandwidth sweep."""
+    return [[WorkerSpec(bandwidth_scale=s) for _ in range(n)]
+            for s in scales]
+
+
+def straggler_specs(n: int, slowdowns: Sequence[float], *, straggler: int = 0
+                    ) -> List[List[WorkerSpec]]:
+    """One sweep point per slowdown: worker ``straggler`` is that much
+    slower — the ``workers`` grid for a straggler sweep."""
+    return [[WorkerSpec(compute_scale=s if i == straggler else 1.0)
+             for i in range(n)] for s in slowdowns]
+
+
+# ================================================================= models
+@register("amp", algorithm="Alg 3")
+@dataclasses.dataclass(frozen=True)
+class AMP(Optimization):
+    """Paper Algorithm 3 (AMP).
+
+    GPU original: sgemm/scudnn kernels 3x (TensorCore), everything else 2x
+    (halved bytes).  TPU analogue: MXU-bound ops (dot/convolution fusions
+    whose roofline is compute) get ``matmul_speedup`` (bf16 -> int8/fp8 on
+    the MXU); bandwidth-bound ops get ``memory_speedup`` (halved HBM
+    traffic).
+    """
+
+    matmul_speedup: float = 3.0
+    memory_speedup: float = 2.0
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        for t in tf.select(on_device):
+            if t.kind == TaskKind.COLLECTIVE:
+                t.duration /= self.memory_speedup   # payload bits halve too
+                t.comm_bytes /= self.memory_speedup
+            elif t.attrs.get("opcode") in ("dot", "convolution") or (
+                    t.kind == TaskKind.COMPUTE and t.flops > t.bytes_accessed):
+                t.duration /= self.matmul_speedup
+            else:
+                t.duration /= self.memory_speedup
+
+
+@register("fused_optimizer", "fusedadam", algorithm="Alg 4")
+@dataclasses.dataclass(frozen=True)
+class FusedOptimizer(Optimization):
+    """Paper Algorithm 4 (FusedAdam).
+
+    Remove every weight-update-phase device task, insert one fused task
+    whose duration is the roofline of the *summed* FLOPs/bytes — on GPU the
+    win is eliminated CUDA-launch overhead; on TPU it is the eliminated
+    per-op issue overhead and re-fused memory traffic.
+    """
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        wu = [t for t in tf.select(all_of(on_device, by_phase("update")))
+              if t.kind != TaskKind.COLLECTIVE]
+        if not wu:
+            return
+        total_flops = sum(t.flops for t in wu)
+        # fused kernel reads params/grads/moments once: bytes = unique
+        # traffic, approximated as the sum minus re-read intermediates
+        # (2/3 of memory ops).
+        total_bytes = sum(t.bytes_accessed for t in wu) / 3.0
+        first, rest = wu[0], wu[1:]
+        first.name = "fused_optimizer_kernel"
+        first.flops = total_flops
+        first.bytes_accessed = total_bytes
+        first.duration = s.cost.compute_time(total_flops, total_bytes)
+        for t in rest:
+            tf.remove(t)
+
+
+@register("fused_norm", algorithm="Alg 5")
+@dataclasses.dataclass(frozen=True)
+class FusedNorm(Optimization):
+    """Paper Algorithm 5 (Reconstructing Batchnorm), normalized for LMs.
+
+    Split the normalization, fuse halves with neighbouring compute: remove
+    the activation tasks (now fused into matmuls) and speed normalization
+    tasks by 2x (halved input reads).
+    """
+
+    norm_layer: str = "norm"
+    activation_pattern: str = r"max|tanh|gelu|silu|logistic"
+    norm_speedup: float = 2.0
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        tf.remove(all_of(on_device, by_layer(self.norm_layer),
+                         by_name(self.activation_pattern)))
+        for t in tf.select(all_of(on_device, by_layer(self.norm_layer))):
+            if t.kind != TaskKind.COLLECTIVE:
+                t.duration /= self.norm_speedup
+
+
+@register("ddp", "distributed", algorithm="Alg 6")
+@dataclasses.dataclass(frozen=True)
+class DDP(Optimization):
+    """Paper Algorithm 6: predict DP training from a single-worker profile.
+
+    Inserts one all-reduce per gradient bucket on a dedicated communication
+    lane (NCCL-stream semantics: buckets serialize on the lane), with
+    wait-free-backprop dependencies: last bwd task of the bucket's layers ->
+    all-reduce -> first update task.  Worker count and gradient payloads
+    come from the scenario.
+    """
+
+    bucket_bytes: float = 25 * 1024 * 1024
+    bandwidth: Optional[float] = None
+    crosses_pod: bool = False
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        cost = s.cost
+        num_workers = s.num_workers
+        layer_grad_bytes = s.grads
+        coll = CollectiveModel(cost.hw, cost.topo)
+        if self.bandwidth is not None:
+            # override link bandwidth (the paper's 10/20/40 Gbps sweeps)
+            coll = CollectiveModel(
+                dataclasses.replace(cost.hw, ici_bandwidth=self.bandwidth,
+                                    dcn_bandwidth=self.bandwidth), cost.topo)
+        g = tf.graph
+
+        # ready order: reverse forward order, approximated by
+        # last-bwd-finish order
+        bwd_last: Dict[str, Task] = {}
+        for t in g.lane_tasks(DEVICE_STREAM):
+            if t.phase == "bwd" and t.layer in layer_grad_bytes:
+                bwd_last[t.layer] = t          # lane order => last wins
+        order = [l for l in bwd_last] or list(reversed(list(layer_grad_bytes)))
+        missing = [l for l in layer_grad_bytes if l not in order]
+        order += missing
+        buckets = bucket_layers(layer_grad_bytes, self.bucket_bytes,
+                                reverse_order=order)
+
+        lane = g.lane_tasks(DEVICE_STREAM)
+        lane_pos = {t.uid: i for i, t in enumerate(lane)}
+        update_tasks = [t for t in lane if t.phase == "update"]
+        sync = [t for t in g.lane_tasks(HOST_THREAD)
+                if t.kind == TaskKind.SYNC]
+        tail = sync[-1] if sync else None
+
+        for i, (layers, payload) in enumerate(buckets):
+            dur = coll.group_time("all-reduce", payload, num_workers,
+                                  self.crosses_pod)
+            ar = Task(name=f"allreduce:bucket{i}", kind=TaskKind.COLLECTIVE,
+                      thread=GRAD_CHANNEL, duration=dur, comm_bytes=payload,
+                      phase="comm", attrs={"collective": "all-reduce",
+                                           "group_size": num_workers,
+                                           "bucket": i, "layers": layers})
+            parents = [bwd_last[l] for l in layers if l in bwd_last]
+            # paper: AllReduce -> WU.  XLA may interleave update ops with
+            # bwd, so pick the earliest update task scheduled *after* every
+            # parent to stay acyclic; fall back to the host-side completion
+            # sync.
+            after = max((lane_pos[p.uid] for p in parents), default=-1)
+            barrier = next((t for t in update_tasks
+                            if lane_pos[t.uid] > after), tail)
+            children = [x for x in (barrier,) if x is not None]
+            tf.append(ar, parents=parents, children=children)
+
+
+def extend_next_forward(tf: GraphTransform) -> Dict[str, Task]:
+    """Clone the forward-phase device tasks as a next-iteration prologue.
+
+    Cross-iteration what-ifs (P3, parameter-server pulls) gate the *next*
+    forward pass on communication; a single-iteration graph cannot express
+    that, so we append a copy of the fwd segment after the current
+    iteration's device lane (paper Algorithm 7 inserts push/pull "between
+    the backward and the forward GPU tasks for each layer").  Returns
+    {layer: first cloned fwd task}.
+    """
+    g = tf.graph
+    fwd = [t for t in g.lane_tasks(DEVICE_STREAM) if t.phase == "fwd"]
+    first_of_layer: Dict[str, Task] = {}
+    sync = [t for t in g.lane_tasks(HOST_THREAD) if t.kind == TaskKind.SYNC]
+    tail = sync[-1] if sync else None
+    for t in fwd:
+        c = t.clone()
+        c.name = f"next:{t.name}"
+        c.phase = "next_fwd"
+        g.add_task(c)                      # appends to device lane => ordered
+        if t.layer and t.layer not in first_of_layer:
+            first_of_layer[t.layer] = c
+        if tail is not None:
+            g.add_edge(c, tail)
+    return first_of_layer
+
+
+@register("p3", algorithm="Alg 7")
+@dataclasses.dataclass(frozen=True)
+class P3(Optimization):
+    """Paper Algorithm 7 (Priority-Based Parameter Propagation).
+
+    Slice each layer's gradient, insert push/pull pairs on send/receive
+    channels, prioritize slices of layers closer to the *input* (they are
+    needed last in bwd but first in the *next* fwd), and override the
+    scheduler with the priority policy.  The next-iteration forward segment
+    is cloned so the pull->fwd dependency is expressible.
+
+    ``priority=False, slice_bytes=inf`` gives the plain parameter-server
+    baseline of paper Fig. 10.
+    """
+
+    bandwidth: float = 0.0
+    slice_bytes: float = 4 * 1024 * 1024
+    priority: bool = True
+
+    def __post_init__(self) -> None:
+        if self.bandwidth <= 0:
+            raise OptimizationError(
+                "p3 needs bandwidth=<bytes/s> (the per-link push/pull "
+                "bandwidth)")
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        layer_grad_bytes = s.grads
+        num_workers = s.num_workers
+        g = tf.graph
+
+        bwd_last: Dict[str, Task] = {}
+        for t in g.lane_tasks(DEVICE_STREAM):
+            if t.layer in layer_grad_bytes and t.phase == "bwd":
+                bwd_last[t.layer] = t
+        next_fwd = extend_next_forward(tf)
+        sync = [t for t in g.lane_tasks(HOST_THREAD)
+                if t.kind == TaskKind.SYNC]
+        tail = sync[-1] if sync else None
+
+        # priority: negative distance to output == earlier layers first
+        # (paper line 9)
+        layer_order = list(layer_grad_bytes)
+        prio = {l: -(len(layer_order) - i)
+                for i, l in enumerate(layer_order)}
+
+        for layer, gbytes in layer_grad_bytes.items():
+            nslices = max(1, math.ceil(gbytes / self.slice_bytes))
+            per = gbytes / nslices
+            t_push = per * (num_workers - 1) / max(num_workers, 1) \
+                / self.bandwidth
+            for sl in range(nslices):
+                push = Task(name=f"push:{layer}:{sl}",
+                            kind=TaskKind.COLLECTIVE,
+                            thread=ici_channel("send"), duration=t_push,
+                            comm_bytes=per, phase="comm",
+                            attrs={"priority": prio[layer]})
+                pull = Task(name=f"pull:{layer}:{sl}",
+                            kind=TaskKind.COLLECTIVE,
+                            thread=ici_channel("recv"), duration=t_push,
+                            comm_bytes=per, phase="comm",
+                            attrs={"priority": prio[layer]})
+                parents = [bwd_last[layer]] if layer in bwd_last else []
+                tf.append(push, parents=parents)
+                children = [x for x in (next_fwd.get(layer, tail),)
+                            if x is not None]
+                tf.append(pull, parents=[push], children=children)
+
+        if self.priority:
+            tf.prioritize(lambda t: t.attrs.get("priority", -1e9))
+
+
+@register("blueconnect", algorithm="Alg 8")
+@dataclasses.dataclass(frozen=True)
+class BlueConnect(Optimization):
+    """Paper Algorithm 8: decompose each all-reduce into per-axis
+    reduce-scatter chains + reversed all-gather chains on parallel channels.
+
+    ``axes`` is ((axis_name, size), ...) — the factorization p1*p2*...*pk.
+    """
+
+    axes: Tuple[Tuple[str, int], ...] = ()
+
+    def __post_init__(self) -> None:
+        if not self.axes:
+            raise OptimizationError(
+                "blueconnect needs axes=[(axis_name, size), ...]")
+        object.__setattr__(self, "axes",
+                           tuple((str(a), int(n)) for a, n in self.axes))
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        cost = s.cost
+        coll = CollectiveModel(cost.hw, cost.topo)
+        targets = [t for t in tf.select(
+            lambda t: t.kind == TaskKind.COLLECTIVE
+            and t.attrs.get("collective") == "all-reduce")]
+        for u in targets:
+            parents = tf.graph.parents(u)
+            children = tf.graph.children(u)
+            payload = u.comm_bytes
+            prev: List[Task] = list(parents)
+            p = payload
+            chain: List[Task] = []
+            for ax, n in self.axes:
+                kind = cost.topo.axis_kind.get(ax, "ici")
+                rs = Task(name=f"reduce-scatter:{u.name}:{ax}",
+                          kind=TaskKind.COLLECTIVE, thread=ici_channel(ax),
+                          duration=coll.axis_time("reduce-scatter", p, n,
+                                                  kind),
+                          comm_bytes=p, phase="comm",
+                          attrs={"collective": "reduce-scatter",
+                                 "group_size": n})
+                tf.append(rs, parents=prev)
+                prev = [rs]
+                chain.append(rs)
+                p /= max(n, 1)
+            for ax, n in reversed(list(self.axes)):
+                kind = cost.topo.axis_kind.get(ax, "ici")
+                p *= max(n, 1)
+                ag = Task(name=f"all-gather:{u.name}:{ax}",
+                          kind=TaskKind.COLLECTIVE, thread=ici_channel(ax),
+                          duration=coll.axis_time("all-gather", p, n, kind),
+                          comm_bytes=p, phase="comm",
+                          attrs={"collective": "all-gather",
+                                 "group_size": n})
+                tf.append(ag, parents=prev)
+                prev = [ag]
+                chain.append(ag)
+            for c in children:
+                tf.graph.add_edge(prev[0], c)
+            tf.remove(u)
+
+
+@register("remove_layer", algorithm="Alg 9")
+@dataclasses.dataclass(frozen=True)
+class RemoveLayer(Optimization):
+    """Paper Algorithm 9 Remove_layer (MetaFlow)."""
+
+    layer_pattern: str
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        tf.remove(all_of(on_device, by_layer(self.layer_pattern)))
+
+
+@register("scale_layer", algorithm="Alg 9")
+@dataclasses.dataclass(frozen=True)
+class ScaleLayer(Optimization):
+    """Paper Algorithm 9 Scale_layer (MetaFlow)."""
+
+    layer_pattern: str
+    scale: float = 1.0
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        tf.scale(all_of(on_device, by_layer(self.layer_pattern)), self.scale)
+
+    def retune(self, s: Scenario, tf: GraphTransform,
+               old: "Optimization") -> bool:
+        if self.layer_pattern != old.layer_pattern or old.scale == 0:
+            return False
+        tf.scale(all_of(on_device, by_layer(self.layer_pattern)),
+                 self.scale / old.scale)
+        return True
+
+
+def _layer_anchors(graph: DependencyGraph, layer_pattern: str
+                   ) -> Tuple[Dict[str, Task], Dict[str, Task]]:
+    """Per matching layer: (last forward task, first backward task) on the
+    device lane — the insertion anchors of the activation what-ifs."""
+    import re
+    rx = re.compile(layer_pattern)
+    fwd_last: Dict[str, Task] = {}
+    bwd_first: Dict[str, Task] = {}
+    for t in graph.lane_tasks(DEVICE_STREAM):
+        if t.layer and rx.search(t.layer):
+            if t.phase == "fwd":
+                fwd_last[t.layer] = t
+            elif t.phase == "bwd" and t.layer not in bwd_first:
+                bwd_first[t.layer] = t
+    return fwd_last, bwd_first
+
+
+@register("offload", "vdnn", algorithm="Alg 10")
+@dataclasses.dataclass(frozen=True)
+class Offload(Optimization):
+    """Paper Algorithm 10 (vDNN), TPU form: activations of matching layers
+    are offloaded HBM->host after their forward task and prefetched
+    host->HBM before their backward task, on the DMA channel.
+    ``prefetch_distance`` controls how many layers ahead the prefetch is
+    hooked (the paper's custom Schedule override becomes an explicit
+    dependency re-wiring here).  Activation bytes come from the scenario.
+    """
+
+    layer_pattern: str
+    prefetch_distance: int = 1
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        cost, activation_bytes = s.cost, s.acts
+        fwd_last, bwd_first = _layer_anchors(tf.graph, self.layer_pattern)
+        bwd_order = [l for l in bwd_first]
+        for i, layer in enumerate(bwd_order):
+            nbytes = activation_bytes.get(layer, 0.0)
+            if nbytes <= 0 or layer not in fwd_last:
+                continue
+            off = Task(name=f"offload:{layer}", kind=TaskKind.OFFLOAD,
+                       thread=DMA_CHANNEL,
+                       duration=cost.offload_time(nbytes),
+                       bytes_accessed=nbytes, phase="fwd")
+            tf.append(off, parents=[fwd_last[layer]])
+            pre = Task(name=f"prefetch:{layer}", kind=TaskKind.OFFLOAD,
+                       thread=DMA_CHANNEL,
+                       duration=cost.offload_time(nbytes),
+                       bytes_accessed=nbytes, phase="bwd")
+            # prefetch is triggered `prefetch_distance` bwd layers early
+            trigger_idx = max(0, i - self.prefetch_distance)
+            trigger = bwd_first[bwd_order[trigger_idx]]
+            parents = [off] + ([trigger] if trigger_idx != i else [])
+            tf.append(pre, parents=parents, children=[bwd_first[layer]])
+
+
+@register("gist", algorithm="Alg 11")
+@dataclasses.dataclass(frozen=True)
+class Gist(Optimization):
+    """Paper Algorithm 11 (Gist): insert encode after fwd / decode before
+    bwd as device tasks costed like element-wise kernels over the
+    activation (bytes from the scenario)."""
+
+    layer_pattern: str
+    codec_bytes_per_elem_ratio: float = 2.0
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        cost, activation_bytes = s.cost, s.acts
+        fwd_last, bwd_first = _layer_anchors(tf.graph, self.layer_pattern)
+        for layer, anchor in fwd_last.items():
+            nbytes = activation_bytes.get(layer, 0.0)
+            if nbytes <= 0:
+                continue
+            traffic = nbytes * self.codec_bytes_per_elem_ratio
+            enc = Task(name=f"gist-encode:{layer}", kind=TaskKind.MEMORY,
+                       thread=DEVICE_STREAM, bytes_accessed=traffic,
+                       duration=cost.compute_time(nbytes, traffic),
+                       phase="fwd")
+            tf.insert_after(anchor, enc)
+            if layer in bwd_first:
+                dec = Task(name=f"gist-decode:{layer}",
+                           kind=TaskKind.MEMORY, thread=DEVICE_STREAM,
+                           bytes_accessed=traffic,
+                           duration=cost.compute_time(nbytes, traffic),
+                           phase="bwd")
+                tf.insert_before(bwd_first[layer], dec, extra_parents=[enc])
+
+
+@register("dgc", algorithm="Alg 12")
+@dataclasses.dataclass(frozen=True)
+class DGC(Optimization):
+    """Paper Algorithm 12 (Deep Gradient Compression): scale every gradient
+    collective's payload by ``compression`` and insert compress/decompress
+    device tasks around it."""
+
+    compression: float = 0.01
+    codec_flops_per_byte: float = 4.0
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        cost = s.cost
+        targets = [t for t in tf.select(
+            lambda t: t.kind == TaskKind.COLLECTIVE and
+            t.attrs.get("collective") in ("all-reduce", "reduce-scatter"))]
+        for u in targets:
+            payload = u.comm_bytes
+            u.comm_bytes = payload * self.compression
+            u.duration = u.duration * self.compression
+            f = payload * self.codec_flops_per_byte
+            comp = Task(name=f"dgc-compress:{u.name}", kind=TaskKind.COMPUTE,
+                        thread=DEVICE_STREAM, flops=f,
+                        bytes_accessed=2 * payload,
+                        duration=cost.compute_time(f, 2 * payload),
+                        phase="comm")
+            dec = Task(name=f"dgc-decompress:{u.name}",
+                       kind=TaskKind.COMPUTE, thread=DEVICE_STREAM, flops=f,
+                       bytes_accessed=2 * payload * self.compression,
+                       duration=cost.compute_time(
+                           f, 2 * payload * self.compression),
+                       phase="comm")
+            parents = list(tf.graph.parents(u))
+            children = list(tf.graph.children(u))
+            lane = tf.graph.lane_tasks(DEVICE_STREAM)
+            lane_pos = {t.uid: i for i, t in enumerate(lane)}
+            dev_parents = [p for p in parents if p.thread == DEVICE_STREAM]
+            # compress right after its last device-lane producer (WFBP
+            # overlap keeps)
+            if dev_parents:
+                anchor = max(dev_parents, key=lambda p: lane_pos[p.uid])
+                tf.insert_after(anchor, comp, extra_children=[u])
+            else:
+                tf.append(comp, children=[u])
+            for p in parents:
+                tf.graph.remove_edge(p, u)
+                if p.uid != comp.uid:
+                    tf.graph.add_edge(p, comp)
+            # decompress: must sit *after* compress in device program order
+            # (XLA may schedule a bucket's consumer earlier in the lane than
+            # a later bucket's last producer; splicing before such a
+            # consumer would close a cycle through the lane edges).  Pick
+            # the earliest device-lane consumer after comp; if none, run
+            # decompress right after compress.
+            lane = tf.graph.lane_tasks(DEVICE_STREAM)
+            lane_pos = {t.uid: i for i, t in enumerate(lane)}
+            dev_children = [c for c in children if c.thread == DEVICE_STREAM
+                            and lane_pos[c.uid] > lane_pos[comp.uid]]
+            if dev_children:
+                anchor = min(dev_children, key=lambda c: lane_pos[c.uid])
+                tf.insert_before(anchor, dec, extra_parents=[u])
+            else:
+                tf.insert_after(comp, dec, extra_parents=[u])
+            lane_pos = {t.uid: i for i, t in
+                        enumerate(tf.graph.lane_tasks(DEVICE_STREAM))}
+            for c in children:
+                tf.graph.remove_edge(u, c)
+                if c.uid == dec.uid:
+                    continue
+                if (c.thread == DEVICE_STREAM
+                        and lane_pos[c.uid] <= lane_pos[dec.uid]):
+                    continue   # lane-earlier consumer: order kept by the lane
+                tf.graph.add_edge(dec, c)
+
+
+@register("zero", algorithm="beyond-paper")
+@dataclasses.dataclass(frozen=True)
+class ZeRO(Optimization):
+    """ZeRO-1/2 style: replace gradient all-reduce with reduce-scatter,
+    shard the optimizer update by 1/N, all-gather updated params (N from
+    the scenario's worker spec)."""
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        cost, num_workers = s.cost, s.num_workers
+        coll = CollectiveModel(cost.hw, cost.topo)
+        for u in tf.select(lambda t: t.kind == TaskKind.COLLECTIVE and
+                           t.attrs.get("collective") == "all-reduce"):
+            payload = u.comm_bytes
+            u.name = f"reduce-scatter:{u.name}"
+            u.attrs["collective"] = "reduce-scatter"
+            u.duration = coll.group_time("reduce-scatter", payload,
+                                         num_workers)
+            ag = Task(name="all-gather:params", kind=TaskKind.COLLECTIVE,
+                      thread=u.thread,
+                      duration=coll.group_time("all-gather", payload,
+                                               num_workers),
+                      comm_bytes=payload, phase="comm",
+                      attrs={"collective": "all-gather",
+                             "group_size": num_workers})
+            # forward only cross-thread consumers (the weight-update
+            # barrier).  u's same-lane successor is the *next bucket's*
+            # reduce-scatter; the channel lane already orders it, and an
+            # explicit ag->successor edge would contradict ag's position at
+            # the lane tail (a cycle)
+            children = [c for c in tf.graph.children(u)
+                        if c.thread != u.thread]
+            tf.append(ag, parents=[u], children=children)
+        tf.scale(all_of(on_device, by_phase("update")), 1.0 / num_workers)
+
+
+@register("overlap", "overlap_collectives", algorithm="beyond-paper")
+@dataclasses.dataclass(frozen=True)
+class OverlapCollectives(Optimization):
+    """Move device-lane collectives onto ICI channel lanes (async
+    collectives), keeping data dependencies — models compute/communication
+    overlap."""
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        g = tf.graph
+        for t in list(g.lane_tasks(DEVICE_STREAM)):
+            if t.kind == TaskKind.COLLECTIVE:
+                parents = g.parents(t)
+                children = g.children(t)
+                nt = t.clone()
+                nt.thread = ici_channel("ici")
+                g.remove_task(t, bridge=True)
+                g.add_task(nt)
+                for p in parents:
+                    if nt.uid != p.uid and p in g:
+                        g.add_edge(p, nt)
+                for c in children:
+                    if nt.uid != c.uid and c in g:
+                        g.add_edge(nt, c)
+
+
+@register("straggler", algorithm="beyond-paper")
+@dataclasses.dataclass(frozen=True)
+class Straggler(Optimization):
+    """One slow replica in a synchronous job: every collective waits for
+    the straggler, so collective durations stretch by the straggler's extra
+    compute time (symmetric-worker model, paper §4.2.1 'Duration').  For
+    the structural per-worker model, use a cluster scenario with a slowed
+    :class:`WorkerSpec` instead."""
+
+    slowdown: float = 1.5
+    affected_fraction: float = 1.0
+
+    @staticmethod
+    def _per_collective_extra(tf: GraphTransform, slowdown: float,
+                              affected_fraction: float
+                              ) -> Tuple[List[Task], float]:
+        device_time = sum(t.duration for t in tf.select(on_device)
+                          if t.kind != TaskKind.COLLECTIVE)
+        extra = device_time * (slowdown - 1.0) * affected_fraction
+        colls = tf.select(lambda t: t.kind == TaskKind.COLLECTIVE)
+        return colls, (extra / len(colls) if colls else 0.0)
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        colls, per = self._per_collective_extra(tf, self.slowdown,
+                                                self.affected_fraction)
+        for t in colls:
+            t.duration += per
+
+    def retune(self, s: Scenario, tf: GraphTransform,
+               old: "Optimization") -> bool:
+        # device durations are untouched by build, so the per-collective
+        # extras of both parameterizations are recomputable from tf itself
+        colls, per_old = self._per_collective_extra(
+            tf, old.slowdown, old.affected_fraction)
+        _, per_new = self._per_collective_extra(
+            tf, self.slowdown, self.affected_fraction)
+        for t in colls:
+            t.duration += per_new - per_old
+        return True
+
+
+@register("bandwidth", algorithm="beyond-paper")
+@dataclasses.dataclass(frozen=True)
+class Bandwidth(Optimization):
+    """Paper Fig. 2 example: 'what if network bandwidth is N x'."""
+
+    factor: float = 1.0
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        tf.scale(lambda t: t.kind == TaskKind.COLLECTIVE, 1.0 / self.factor)
+
+    def retune(self, s: Scenario, tf: GraphTransform,
+               old: "Optimization") -> bool:
+        if old.factor == 0:
+            return False
+        tf.scale(lambda t: t.kind == TaskKind.COLLECTIVE,
+                 old.factor / self.factor)
+        return True
+
+
+@register("grad_accum", algorithm="beyond-paper")
+@dataclasses.dataclass(frozen=True)
+class GradAccum(Optimization):
+    """Gradient accumulation: fwd+bwd repeat ``microbatches`` times per
+    step, collectives and update run once (amortized)."""
+
+    microbatches: int = 1
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        tf.scale(all_of(on_device, by_phase("fwd")),
+                 float(self.microbatches))
+        tf.scale(all_of(on_device, by_phase("bwd")),
+                 float(self.microbatches))
+
+
+# ================================================================= search
+def default_candidates(scenario: Scenario) -> List[Optimization]:
+    """Default-constructible registered optimizations — the search space a
+    driver explores when the user names none."""
+    out: List[Optimization] = []
+    for name in available():
+        cls = get_optimization(name)
+        try:
+            out.append(cls())
+        except (TypeError, OptimizationError):
+            continue       # requires parameters the driver cannot default
+    return out
+
+
+def greedy_search(scenario: Scenario, *, max_depth: int = 3,
+                  candidates: Optional[Sequence[Optimization]] = None
+                  ) -> Tuple[Optional[Optimization], List[Prediction]]:
+    """Greedy hill-climb over the registry: repeatedly stack whichever
+    candidate most reduces the predicted makespan, until no candidate
+    improves or ``max_depth`` is reached.
+
+    Candidates that do not apply to the scenario (missing byte maps, no
+    collectives to transform, ...) are skipped, so the search runs on any
+    scenario.  Returns ``(best stack or None, per-round best predictions)``.
+    """
+    cands = list(candidates) if candidates is not None \
+        else default_candidates(scenario)
+    chosen: List[Optimization] = []
+    best = scenario.baseline().makespan
+    trail: List[Prediction] = []
+    for _ in range(max_depth):
+        round_best: Optional[Prediction] = None
+        for cand in cands:
+            if any(type(cand) is type(o) for o in chosen):
+                continue
+            try:
+                pred = scenario.predict(Stack(*chosen, cand) if chosen
+                                        else cand)
+            except Exception:
+                continue      # not applicable to this scenario
+            if pred.predicted < (round_best.predicted if round_best
+                                 else best):
+                round_best = pred
+        if round_best is None:
+            break
+        opt = round_best.optimization
+        chosen = list(opt.opts) if isinstance(opt, Stack) else [opt]
+        best = round_best.predicted
+        trail.append(round_best)
+    if not chosen:
+        return None, trail
+    return (chosen[0] if len(chosen) == 1 else Stack(*chosen)), trail

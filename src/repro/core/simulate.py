@@ -161,16 +161,20 @@ def simulate(graph: DependencyGraph, schedule: Optional[ScheduleFn] = None) -> S
     handed to the policy — the same candidate set the legacy loop's built-in
     policies select from — and the losers are re-pushed.
     """
+    # direct adjacency access (uid sets) — the engine is the hottest loop in
+    # the system and per-call Task-list materialization doubles its cost
+    by_uid = graph._tasks
+    children_of = graph._children
+    parents_of = graph._parents
     ref: Dict[int, int] = {}
     earliest: Dict[int, float] = {}          # "u.start" accumulator of Algorithm 1
-    by_uid: Dict[int, Task] = {}
     heap: List[Tuple[float, float, int]] = []
-    for t in graph.tasks():
-        by_uid[t.uid] = t
-        ref[t.uid] = len(graph.parents(t))
-        earliest[t.uid] = 0.0
-        if ref[t.uid] == 0:
-            heap.append((0.0, 0.0, t.uid))
+    for uid in by_uid:
+        n = len(parents_of[uid]) if uid in parents_of else 0
+        ref[uid] = n
+        earliest[uid] = 0.0
+        if n == 0:
+            heap.append((0.0, 0.0, uid))
     heapq.heapify(heap)
 
     progress: Dict[str, float] = collections.defaultdict(float)   # P
@@ -180,12 +184,15 @@ def simulate(graph: DependencyGraph, schedule: Optional[ScheduleFn] = None) -> S
     busy_intervals: Dict[str, List[Tuple[float, float]]] = collections.defaultdict(list)
     executed = 0
 
+    heappush, heappop = heapq.heappush, heapq.heappop
     while heap:
-        eff_key, _, uid = heapq.heappop(heap)
+        eff_key, _, uid = heappop(heap)
         u = by_uid[uid]
-        eff = max(progress[u.thread], earliest[uid])
+        e = earliest[uid]
+        p = progress[u.thread]
+        eff = p if p > e else e
         if eff > eff_key:                     # stale lower bound: re-key
-            heapq.heappush(heap, (eff, earliest[uid], uid))
+            heappush(heap, (eff, e, uid))
             continue
         if schedule is not None:
             candidates = [u]
@@ -208,22 +215,29 @@ def simulate(graph: DependencyGraph, schedule: Optional[ScheduleFn] = None) -> S
                 heapq.heappush(heap, item)
 
         th = u.thread
-        s = max(progress[th], earliest[u.uid])
-        start[u.uid] = s
+        uu = u.uid
+        e = earliest[uu]
+        p = progress[th]
+        s = p if p > e else e
+        start[uu] = s
         end = s + u.duration
-        finish[u.uid] = end
-        progress[th] = end + u.gap
+        finish[uu] = end
+        done = end + u.gap
+        progress[th] = done
         busy[th] += u.duration
         if u.duration > 0:
             busy_intervals[th].append((s, end))
         executed += 1
-        done = end + u.gap
-        for c in graph.children(u):
-            ref[c.uid] -= 1
-            earliest[c.uid] = max(earliest[c.uid], done)
-            if ref[c.uid] == 0:
-                eff_c = max(progress[c.thread], earliest[c.uid])
-                heapq.heappush(heap, (eff_c, earliest[c.uid], c.uid))
+        if uu in children_of:
+            for cuid in children_of[uu]:
+                r = ref[cuid] - 1
+                ref[cuid] = r
+                if earliest[cuid] < done:
+                    earliest[cuid] = done
+                if r == 0:
+                    ec = earliest[cuid]
+                    pc = progress[by_uid[cuid].thread]
+                    heappush(heap, (pc if pc > ec else ec, ec, cuid))
 
     return _assemble(graph, executed, progress, start, finish, busy,
                      busy_intervals)

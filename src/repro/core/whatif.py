@@ -1,12 +1,19 @@
-"""Modeled optimizations (paper §5 + Appendix A) as graph-transformation recipes.
+"""Modeled optimizations (paper §5 + Appendix A) — legacy function surface.
 
-Each ``what_if_*`` function takes a baseline graph (plus optimization-specific
-knowledge, e.g. per-layer gradient bytes) and returns a transformed
-:class:`GraphTransform` ready to simulate.  The implementations intentionally
-track the paper's pseudo code (Algorithms 3–12) line-for-line where it exists,
-re-grounded for TPU semantics per DESIGN.md §2.
+The implementations live in :mod:`repro.core.optimize` as registered
+:class:`~repro.core.optimize.Optimization` dataclasses (one per paper
+algorithm; see the table in that module's docstring).  Every function here
+is a thin wrapper that builds the matching optimization and a
+:class:`~repro.core.optimize.Scenario`, kept so existing call sites and
+notebooks keep working:
 
-Paper table-1 coverage implemented here:
+* ``what_if_*``          -> analytical single-graph route, returns the
+  applied :class:`GraphTransform`.
+* ``cluster_what_if_*``  -> global-cluster route (worker specs -> dPRO-style
+  :class:`ClusterGraph`), returns the per-worker :class:`ClusterResult`.
+  ``collective_mode`` threads through every cluster wrapper uniformly.
+
+Paper table-1 coverage (all composable via ``optimize.Stack`` / ``|``):
   AMP, FusedAdam, Reconstructing-Norm, DDP insertion, P3,          (evaluated, §5.1)
   BlueConnect, MetaFlow, vDNN, Gist, DGC                            (modeled,   §5.2)
 Beyond-paper what-ifs:
@@ -16,91 +23,60 @@ Beyond-paper what-ifs:
 
 from __future__ import annotations
 
-import math
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
-from .cluster import ClusterGraph, ClusterResult, WorkerSpec, _as_specs
-from .costmodel import CollectiveModel, CostModel
+from .cluster import ClusterResult, WorkerSpec, _as_specs
+from .costmodel import CostModel
 from .graph import DependencyGraph
-from .layermap import bucket_layers
-from .simulate import make_priority_schedule
-from .task import (Task, TaskKind, DEVICE_STREAM, DMA_CHANNEL, HOST_THREAD,
-                   ici_channel)
-from .transform import (GraphTransform, all_of, by_kind, by_layer, by_name,
-                        by_phase, on_device)
+from .optimize import (AMP, DDP, DGC, P3, Bandwidth, BlueConnect,
+                       FusedNorm, FusedOptimizer, Gist, GradAccum,
+                       GRAD_CHANNEL, Offload, OverlapCollectives,
+                       RemoveLayer, ScaleLayer, Scenario, Stack, Straggler,
+                       ZeRO, extend_next_forward)
+from .transform import GraphTransform
 
-GRAD_CHANNEL = ici_channel("grad")
+_worker_specs = _as_specs       # int N or explicit WorkerSpec list, validated
+
+__all__ = [
+    "GRAD_CHANNEL", "extend_next_forward",
+    "what_if_amp", "what_if_fused_optimizer", "what_if_fused_norm",
+    "what_if_distributed", "what_if_p3", "what_if_blueconnect",
+    "what_if_remove_layer", "what_if_scale_layer", "what_if_offload",
+    "what_if_gist", "what_if_dgc", "what_if_zero",
+    "what_if_overlap_collectives", "what_if_straggler", "what_if_bandwidth",
+    "what_if_grad_accum",
+    "cluster_what_if_distributed", "cluster_what_if_zero",
+    "cluster_what_if_p3", "cluster_what_if_straggler",
+    "cluster_what_if_bandwidth",
+]
 
 
 # --------------------------------------------------------------------- AMP
 def what_if_amp(graph: DependencyGraph, *, matmul_speedup: float = 3.0,
                 memory_speedup: float = 2.0) -> GraphTransform:
-    """Paper Algorithm 3 (AMP).
-
-    GPU original: sgemm/scudnn kernels 3x (TensorCore), everything else 2x
-    (halved bytes).  TPU analogue: MXU-bound ops (dot/convolution fusions whose
-    roofline is compute) get ``matmul_speedup`` (bf16 -> int8/fp8 on the MXU);
-    bandwidth-bound ops get ``memory_speedup`` (halved HBM traffic).
-    """
-    tf = GraphTransform(graph)
-    for t in tf.select(on_device):
-        if t.kind == TaskKind.COLLECTIVE:
-            t.duration /= memory_speedup          # payload bits halve too
-            t.comm_bytes /= memory_speedup
-        elif t.attrs.get("opcode") in ("dot", "convolution") or (
-                t.kind == TaskKind.COMPUTE and t.flops > t.bytes_accessed):
-            t.duration /= matmul_speedup
-        else:
-            t.duration /= memory_speedup
-    return tf
+    """Paper Algorithm 3 (AMP) — see :class:`repro.core.optimize.AMP`."""
+    return AMP(matmul_speedup=matmul_speedup,
+               memory_speedup=memory_speedup).apply(Scenario(graph))
 
 
 # -------------------------------------------------------------- FusedAdam
 def what_if_fused_optimizer(graph: DependencyGraph,
-                            cost: Optional[CostModel] = None) -> GraphTransform:
-    """Paper Algorithm 4 (FusedAdam).
-
-    Remove every weight-update-phase device task, insert one fused task whose
-    duration is the roofline of the *summed* FLOPs/bytes — on GPU the win is
-    eliminated CUDA-launch overhead; on TPU it is the eliminated per-op issue
-    overhead and re-fused memory traffic.
-    """
-    cost = cost or CostModel()
-    tf = GraphTransform(graph)
-    wu = [t for t in tf.select(all_of(on_device, by_phase("update")))
-          if t.kind != TaskKind.COLLECTIVE]
-    if not wu:
-        return tf
-    total_flops = sum(t.flops for t in wu)
-    # fused kernel reads params/grads/moments once: bytes = unique traffic,
-    # approximated as the sum minus re-read intermediates (2/3 of memory ops).
-    total_bytes = sum(t.bytes_accessed for t in wu) / 3.0
-    first, rest = wu[0], wu[1:]
-    first.name = "fused_optimizer_kernel"
-    first.flops = total_flops
-    first.bytes_accessed = total_bytes
-    first.duration = cost.compute_time(total_flops, total_bytes)
-    for t in rest:
-        tf.remove(t)
-    return tf
+                            cost: Optional[CostModel] = None
+                            ) -> GraphTransform:
+    """Paper Algorithm 4 (FusedAdam) — see
+    :class:`repro.core.optimize.FusedOptimizer`."""
+    return FusedOptimizer().apply(Scenario(graph, cost=cost))
 
 
 # ------------------------------------------------- Reconstructing BatchNorm
 def what_if_fused_norm(graph: DependencyGraph, *, norm_layer: str = "norm",
                        activation_pattern: str = r"max|tanh|gelu|silu|logistic",
                        norm_speedup: float = 2.0) -> GraphTransform:
-    """Paper Algorithm 5 (Reconstructing Batchnorm), normalized for LMs.
-
-    Split the normalization, fuse halves with neighbouring compute: remove the
-    activation tasks (now fused into matmuls) and speed normalization tasks by
-    2x (halved input reads).
-    """
-    tf = GraphTransform(graph)
-    tf.remove(all_of(on_device, by_layer(norm_layer), by_name(activation_pattern)))
-    for t in tf.select(all_of(on_device, by_layer(norm_layer))):
-        if t.kind != TaskKind.COLLECTIVE:
-            t.duration /= norm_speedup
-    return tf
+    """Paper Algorithm 5 (Reconstructing Batchnorm) — see
+    :class:`repro.core.optimize.FusedNorm`."""
+    return FusedNorm(norm_layer=norm_layer,
+                     activation_pattern=activation_pattern,
+                     norm_speedup=norm_speedup).apply(Scenario(graph))
 
 
 # ------------------------------------------------------ Distributed (DDP)
@@ -111,82 +87,11 @@ def what_if_distributed(graph: DependencyGraph,
                         bucket_bytes: float = 25 * 1024 * 1024,
                         cost: Optional[CostModel] = None,
                         crosses_pod: bool = False) -> GraphTransform:
-    """Paper Algorithm 6: predict DP training from a single-worker profile.
-
-    Inserts one all-reduce per gradient bucket on a dedicated communication
-    lane (NCCL-stream semantics: buckets serialize on the lane), with
-    wait-free-backprop dependencies: last bwd task of the bucket's layers ->
-    all-reduce -> first update task.
-    """
-    cost = cost or CostModel()
-    coll = CollectiveModel(cost.hw, cost.topo)
-    if bandwidth is not None:
-        # override link bandwidth (the paper's 10/20/40 Gbps sweeps)
-        import dataclasses as _dc
-        coll = CollectiveModel(_dc.replace(cost.hw, ici_bandwidth=bandwidth,
-                                           dcn_bandwidth=bandwidth), cost.topo)
-    tf = GraphTransform(graph)
-    g = tf.graph
-
-    # ready order: reverse forward order, approximated by last-bwd-finish order
-    bwd_last: Dict[str, Task] = {}
-    for t in g.lane_tasks(DEVICE_STREAM):
-        if t.phase == "bwd" and t.layer in layer_grad_bytes:
-            bwd_last[t.layer] = t          # lane order => last wins
-    order = [l for l in bwd_last] or list(reversed(list(layer_grad_bytes)))
-    missing = [l for l in layer_grad_bytes if l not in order]
-    order += missing
-    buckets = bucket_layers(layer_grad_bytes, bucket_bytes, reverse_order=order)
-
-    lane = g.lane_tasks(DEVICE_STREAM)
-    lane_pos = {t.uid: i for i, t in enumerate(lane)}
-    update_tasks = [t for t in lane if t.phase == "update"]
-    sync = [t for t in g.lane_tasks(HOST_THREAD) if t.kind == TaskKind.SYNC]
-    tail = sync[-1] if sync else None
-
-    for i, (layers, payload) in enumerate(buckets):
-        dur = coll.group_time("all-reduce", payload, num_workers, crosses_pod)
-        ar = Task(name=f"allreduce:bucket{i}", kind=TaskKind.COLLECTIVE,
-                  thread=GRAD_CHANNEL, duration=dur, comm_bytes=payload,
-                  phase="comm", attrs={"collective": "all-reduce",
-                                       "group_size": num_workers,
-                                       "bucket": i, "layers": layers})
-        parents = [bwd_last[l] for l in layers if l in bwd_last]
-        # paper: AllReduce -> WU.  XLA may interleave update ops with bwd, so
-        # pick the earliest update task scheduled *after* every parent to stay
-        # acyclic; fall back to the host-side completion sync.
-        after = max((lane_pos[p.uid] for p in parents), default=-1)
-        barrier = next((t for t in update_tasks if lane_pos[t.uid] > after), tail)
-        children = [x for x in (barrier,) if x is not None]
-        tf.append(ar, parents=parents, children=children)
-    return tf
-
-
-def extend_next_forward(tf: GraphTransform) -> Dict[str, Task]:
-    """Clone the forward-phase device tasks as a next-iteration prologue.
-
-    Cross-iteration what-ifs (P3, parameter-server pulls) gate the *next*
-    forward pass on communication; a single-iteration graph cannot express
-    that, so we append a copy of the fwd segment after the current iteration's
-    device lane (paper Algorithm 7 inserts push/pull "between the backward and
-    the forward GPU tasks for each layer").  Returns {layer: first cloned fwd
-    task}.
-    """
-    g = tf.graph
-    fwd = [t for t in g.lane_tasks(DEVICE_STREAM) if t.phase == "fwd"]
-    first_of_layer: Dict[str, Task] = {}
-    sync = [t for t in g.lane_tasks(HOST_THREAD) if t.kind == TaskKind.SYNC]
-    tail = sync[-1] if sync else None
-    for t in fwd:
-        c = t.clone()
-        c.name = f"next:{t.name}"
-        c.phase = "next_fwd"
-        g.add_task(c)                      # appends to device lane => ordered
-        if t.layer and t.layer not in first_of_layer:
-            first_of_layer[t.layer] = c
-        if tail is not None:
-            g.add_edge(c, tail)
-    return first_of_layer
+    """Paper Algorithm 6 (DDP) — see :class:`repro.core.optimize.DDP`."""
+    return DDP(bucket_bytes=bucket_bytes, bandwidth=bandwidth,
+               crosses_pod=crosses_pod).apply(
+        Scenario(graph, cost=cost, layer_grad_bytes=layer_grad_bytes,
+                 workers=num_workers))
 
 
 # ------------------------------------------------------------------- P3
@@ -195,120 +100,33 @@ def what_if_p3(graph: DependencyGraph, layer_grad_bytes: Dict[str, float],
                slice_bytes: float = 4 * 1024 * 1024,
                priority: bool = True,
                cost: Optional[CostModel] = None) -> GraphTransform:
-    """Paper Algorithm 7 (Priority-Based Parameter Propagation).
-
-    Slice each layer's gradient, insert push/pull pairs on send/receive
-    channels, prioritize slices of layers closer to the *input* (they are
-    needed last in bwd but first in the *next* fwd), and override the
-    scheduler with the priority policy.  The next-iteration forward segment is
-    cloned so the pull->fwd dependency is expressible (paper inserts push/pull
-    "between the backward and the forward GPU tasks for each layer").
-
-    ``priority=False, slice_bytes=inf`` gives the plain parameter-server
-    baseline of paper Fig. 10.
-    """
-    cost = cost or CostModel()
-    tf = GraphTransform(graph)
-    g = tf.graph
-
-    bwd_last: Dict[str, Task] = {}
-    for t in g.lane_tasks(DEVICE_STREAM):
-        if t.layer in layer_grad_bytes and t.phase == "bwd":
-            bwd_last[t.layer] = t
-    next_fwd = extend_next_forward(tf)
-    sync = [t for t in g.lane_tasks(HOST_THREAD) if t.kind == TaskKind.SYNC]
-    tail = sync[-1] if sync else None
-
-    # priority: negative distance to output == earlier layers first (paper line 9)
-    layer_order = list(layer_grad_bytes)
-    prio = {l: -(len(layer_order) - i) for i, l in enumerate(layer_order)}
-
-    for layer, gbytes in layer_grad_bytes.items():
-        nslices = max(1, math.ceil(gbytes / slice_bytes))
-        per = gbytes / nslices
-        t_push = per * (num_workers - 1) / max(num_workers, 1) / bandwidth
-        for s in range(nslices):
-            push = Task(name=f"push:{layer}:{s}", kind=TaskKind.COLLECTIVE,
-                        thread=ici_channel("send"), duration=t_push,
-                        comm_bytes=per, phase="comm",
-                        attrs={"priority": prio[layer]})
-            pull = Task(name=f"pull:{layer}:{s}", kind=TaskKind.COLLECTIVE,
-                        thread=ici_channel("recv"), duration=t_push,
-                        comm_bytes=per, phase="comm",
-                        attrs={"priority": prio[layer]})
-            parents = [bwd_last[layer]] if layer in bwd_last else []
-            tf.append(push, parents=parents)
-            children = [x for x in (next_fwd.get(layer, tail),) if x is not None]
-            tf.append(pull, parents=[push], children=children)
-
-    if priority:
-        tf.prioritize(lambda t: t.attrs.get("priority", -1e9))
-    return tf
+    """Paper Algorithm 7 (P3) — see :class:`repro.core.optimize.P3`."""
+    return P3(bandwidth=bandwidth, slice_bytes=slice_bytes,
+              priority=priority).apply(
+        Scenario(graph, cost=cost, layer_grad_bytes=layer_grad_bytes,
+                 workers=num_workers))
 
 
 # ------------------------------------------------------------ BlueConnect
 def what_if_blueconnect(graph: DependencyGraph, axes: Sequence[Tuple[str, int]],
                         cost: Optional[CostModel] = None) -> GraphTransform:
-    """Paper Algorithm 8: decompose each all-reduce into per-axis
-    reduce-scatter chains + reversed all-gather chains on parallel channels.
-
-    ``axes`` is [(axis_name, size), ...] — the factorization p1*p2*...*pk.
-    """
-    cost = cost or CostModel()
-    coll = CollectiveModel(cost.hw, cost.topo)
-    tf = GraphTransform(graph)
-    targets = [t for t in tf.select(lambda t: t.kind == TaskKind.COLLECTIVE
-                                    and t.attrs.get("collective") == "all-reduce")]
-    for u in targets:
-        parents = tf.graph.parents(u)
-        children = tf.graph.children(u)
-        payload = u.comm_bytes
-        prev: List[Task] = list(parents)
-        p = payload
-        chain: List[Task] = []
-        for ax, n in axes:
-            kind = cost.topo.axis_kind.get(ax, "ici")
-            rs = Task(name=f"reduce-scatter:{u.name}:{ax}",
-                      kind=TaskKind.COLLECTIVE, thread=ici_channel(ax),
-                      duration=coll.axis_time("reduce-scatter", p, n, kind),
-                      comm_bytes=p, phase="comm",
-                      attrs={"collective": "reduce-scatter", "group_size": n})
-            tf.append(rs, parents=prev)
-            prev = [rs]
-            chain.append(rs)
-            p /= max(n, 1)
-        for ax, n in reversed(list(axes)):
-            kind = cost.topo.axis_kind.get(ax, "ici")
-            p *= max(n, 1)
-            ag = Task(name=f"all-gather:{u.name}:{ax}",
-                      kind=TaskKind.COLLECTIVE, thread=ici_channel(ax),
-                      duration=coll.axis_time("all-gather", p, n, kind),
-                      comm_bytes=p, phase="comm",
-                      attrs={"collective": "all-gather", "group_size": n})
-            tf.append(ag, parents=prev)
-            prev = [ag]
-            chain.append(ag)
-        for c in children:
-            tf.graph.add_edge(prev[0], c)
-        tf.remove(u)
-    return tf
+    """Paper Algorithm 8 (BlueConnect) — see
+    :class:`repro.core.optimize.BlueConnect`."""
+    return BlueConnect(axes=tuple(axes)).apply(Scenario(graph, cost=cost))
 
 
 # --------------------------------------------------------------- MetaFlow
 def what_if_remove_layer(graph: DependencyGraph, layer_pattern: str
                          ) -> GraphTransform:
     """Paper Algorithm 9 Remove_layer."""
-    tf = GraphTransform(graph)
-    tf.remove(all_of(on_device, by_layer(layer_pattern)))
-    return tf
+    return RemoveLayer(layer_pattern=layer_pattern).apply(Scenario(graph))
 
 
 def what_if_scale_layer(graph: DependencyGraph, layer_pattern: str,
                         scale: float) -> GraphTransform:
     """Paper Algorithm 9 Scale_layer."""
-    tf = GraphTransform(graph)
-    tf.scale(all_of(on_device, by_layer(layer_pattern)), scale)
-    return tf
+    return ScaleLayer(layer_pattern=layer_pattern,
+                      scale=scale).apply(Scenario(graph))
 
 
 # ------------------------------------------------------------------ vDNN
@@ -316,42 +134,11 @@ def what_if_offload(graph: DependencyGraph, layer_pattern: str,
                     activation_bytes: Dict[str, float],
                     cost: Optional[CostModel] = None,
                     prefetch_distance: int = 1) -> GraphTransform:
-    """Paper Algorithm 10 (vDNN), TPU form: activations of matching layers are
-    offloaded HBM->host after their forward task and prefetched host->HBM
-    before their backward task, on the DMA channel.  ``prefetch_distance``
-    controls how many layers ahead the prefetch is hooked (the paper's custom
-    Schedule override becomes an explicit dependency re-wiring here)."""
-    cost = cost or CostModel()
-    tf = GraphTransform(graph)
-    g = tf.graph
-    import re
-    rx = re.compile(layer_pattern)
-    fwd_last: Dict[str, Task] = {}
-    bwd_first: Dict[str, Task] = {}
-    for t in g.lane_tasks(DEVICE_STREAM):
-        if t.layer and rx.search(t.layer):
-            if t.phase == "fwd":
-                fwd_last[t.layer] = t
-            elif t.phase == "bwd" and t.layer not in bwd_first:
-                bwd_first[t.layer] = t
-    bwd_order = [l for l in bwd_first]
-    for i, layer in enumerate(bwd_order):
-        nbytes = activation_bytes.get(layer, 0.0)
-        if nbytes <= 0 or layer not in fwd_last:
-            continue
-        off = Task(name=f"offload:{layer}", kind=TaskKind.OFFLOAD,
-                   thread=DMA_CHANNEL, duration=cost.offload_time(nbytes),
-                   bytes_accessed=nbytes, phase="fwd")
-        tf.append(off, parents=[fwd_last[layer]])
-        pre = Task(name=f"prefetch:{layer}", kind=TaskKind.OFFLOAD,
-                   thread=DMA_CHANNEL, duration=cost.offload_time(nbytes),
-                   bytes_accessed=nbytes, phase="bwd")
-        # prefetch is triggered `prefetch_distance` bwd layers early
-        trigger_idx = max(0, i - prefetch_distance)
-        trigger = bwd_first[bwd_order[trigger_idx]]
-        parents = [off] + ([trigger] if trigger_idx != i else [])
-        tf.append(pre, parents=parents, children=[bwd_first[layer]])
-    return tf
+    """Paper Algorithm 10 (vDNN) — see
+    :class:`repro.core.optimize.Offload`."""
+    return Offload(layer_pattern=layer_pattern,
+                   prefetch_distance=prefetch_distance).apply(
+        Scenario(graph, cost=cost, activation_bytes=activation_bytes))
 
 
 # ------------------------------------------------------------------ Gist
@@ -359,202 +146,65 @@ def what_if_gist(graph: DependencyGraph, layer_pattern: str,
                  activation_bytes: Dict[str, float],
                  cost: Optional[CostModel] = None,
                  codec_bytes_per_elem_ratio: float = 2.0) -> GraphTransform:
-    """Paper Algorithm 11 (Gist): insert encode after fwd / decode before bwd
-    as device tasks costed like element-wise kernels over the activation."""
-    cost = cost or CostModel()
-    tf = GraphTransform(graph)
-    g = tf.graph
-    import re
-    rx = re.compile(layer_pattern)
-    fwd_last: Dict[str, Task] = {}
-    bwd_first: Dict[str, Task] = {}
-    for t in g.lane_tasks(DEVICE_STREAM):
-        if t.layer and rx.search(t.layer):
-            if t.phase == "fwd":
-                fwd_last[t.layer] = t
-            elif t.phase == "bwd" and t.layer not in bwd_first:
-                bwd_first[t.layer] = t
-    for layer, anchor in fwd_last.items():
-        nbytes = activation_bytes.get(layer, 0.0)
-        if nbytes <= 0:
-            continue
-        traffic = nbytes * codec_bytes_per_elem_ratio
-        enc = Task(name=f"gist-encode:{layer}", kind=TaskKind.MEMORY,
-                   thread=DEVICE_STREAM, bytes_accessed=traffic,
-                   duration=cost.compute_time(nbytes, traffic), phase="fwd")
-        tf.insert_after(anchor, enc)
-        if layer in bwd_first:
-            dec = Task(name=f"gist-decode:{layer}", kind=TaskKind.MEMORY,
-                       thread=DEVICE_STREAM, bytes_accessed=traffic,
-                       duration=cost.compute_time(nbytes, traffic), phase="bwd")
-            tf.insert_before(bwd_first[layer], dec, extra_parents=[enc])
-    return tf
+    """Paper Algorithm 11 (Gist) — see :class:`repro.core.optimize.Gist`."""
+    return Gist(layer_pattern=layer_pattern,
+                codec_bytes_per_elem_ratio=codec_bytes_per_elem_ratio).apply(
+        Scenario(graph, cost=cost, activation_bytes=activation_bytes))
 
 
 # ------------------------------------------------------------------- DGC
 def what_if_dgc(graph: DependencyGraph, *, compression: float = 0.01,
                 codec_flops_per_byte: float = 4.0,
                 cost: Optional[CostModel] = None) -> GraphTransform:
-    """Paper Algorithm 12 (Deep Gradient Compression): scale every gradient
-    collective's payload by ``compression`` and insert compress/decompress
-    device tasks around it."""
-    cost = cost or CostModel()
-    tf = GraphTransform(graph)
-    targets = [t for t in tf.select(lambda t: t.kind == TaskKind.COLLECTIVE and
-                                    t.attrs.get("collective") in
-                                    ("all-reduce", "reduce-scatter"))]
-    for u in targets:
-        payload = u.comm_bytes
-        u.comm_bytes = payload * compression
-        u.duration = u.duration * compression
-        f = payload * codec_flops_per_byte
-        comp = Task(name=f"dgc-compress:{u.name}", kind=TaskKind.COMPUTE,
-                    thread=DEVICE_STREAM, flops=f, bytes_accessed=2 * payload,
-                    duration=cost.compute_time(f, 2 * payload), phase="comm")
-        dec = Task(name=f"dgc-decompress:{u.name}", kind=TaskKind.COMPUTE,
-                   thread=DEVICE_STREAM, flops=f,
-                   bytes_accessed=2 * payload * compression,
-                   duration=cost.compute_time(f, 2 * payload * compression),
-                   phase="comm")
-        parents = list(tf.graph.parents(u))
-        children = list(tf.graph.children(u))
-        lane = tf.graph.lane_tasks(DEVICE_STREAM)
-        lane_pos = {t.uid: i for i, t in enumerate(lane)}
-        dev_parents = [p for p in parents if p.thread == DEVICE_STREAM]
-        # compress right after its last device-lane producer (WFBP overlap keeps)
-        if dev_parents:
-            anchor = max(dev_parents, key=lambda p: lane_pos[p.uid])
-            tf.insert_after(anchor, comp, extra_children=[u])
-        else:
-            tf.append(comp, children=[u])
-        for p in parents:
-            tf.graph.remove_edge(p, u)
-            if p.uid != comp.uid:
-                tf.graph.add_edge(p, comp)
-        # decompress: must sit *after* compress in device program order (XLA
-        # may schedule a bucket's consumer earlier in the lane than a later
-        # bucket's last producer; splicing before such a consumer would close
-        # a cycle through the lane edges).  Pick the earliest device-lane
-        # consumer after comp; if none, run decompress right after compress.
-        lane = tf.graph.lane_tasks(DEVICE_STREAM)
-        lane_pos = {t.uid: i for i, t in enumerate(lane)}
-        dev_children = [c for c in children if c.thread == DEVICE_STREAM
-                        and lane_pos[c.uid] > lane_pos[comp.uid]]
-        if dev_children:
-            anchor = min(dev_children, key=lambda c: lane_pos[c.uid])
-            tf.insert_before(anchor, dec, extra_parents=[u])
-        else:
-            tf.insert_after(comp, dec, extra_parents=[u])
-        lane_pos = {t.uid: i
-                    for i, t in enumerate(tf.graph.lane_tasks(DEVICE_STREAM))}
-        for c in children:
-            tf.graph.remove_edge(u, c)
-            if c.uid == dec.uid:
-                continue
-            if (c.thread == DEVICE_STREAM
-                    and lane_pos[c.uid] <= lane_pos[dec.uid]):
-                continue      # lane-earlier consumer: order kept by the lane
-            tf.graph.add_edge(dec, c)
-    return tf
+    """Paper Algorithm 12 (DGC) — see :class:`repro.core.optimize.DGC`."""
+    return DGC(compression=compression,
+               codec_flops_per_byte=codec_flops_per_byte).apply(
+        Scenario(graph, cost=cost))
 
 
 # ------------------------------------------------------- beyond the paper
 def what_if_zero(graph: DependencyGraph, num_workers: int,
                  cost: Optional[CostModel] = None) -> GraphTransform:
-    """ZeRO-1/2 style: replace gradient all-reduce with reduce-scatter, shard
-    the optimizer update by 1/N, all-gather updated params."""
-    cost = cost or CostModel()
-    coll = CollectiveModel(cost.hw, cost.topo)
-    tf = GraphTransform(graph)
-    for u in tf.select(lambda t: t.kind == TaskKind.COLLECTIVE and
-                       t.attrs.get("collective") == "all-reduce"):
-        payload = u.comm_bytes
-        u.name = f"reduce-scatter:{u.name}"
-        u.attrs["collective"] = "reduce-scatter"
-        u.duration = coll.group_time("reduce-scatter", payload, num_workers)
-        ag = Task(name=f"all-gather:params", kind=TaskKind.COLLECTIVE,
-                  thread=u.thread,
-                  duration=coll.group_time("all-gather", payload, num_workers),
-                  comm_bytes=payload, phase="comm",
-                  attrs={"collective": "all-gather", "group_size": num_workers})
-        # forward only cross-thread consumers (the weight-update barrier).
-        # u's same-lane successor is the *next bucket's* reduce-scatter; the
-        # channel lane already orders it, and an explicit ag->successor edge
-        # would contradict ag's position at the lane tail (a cycle)
-        children = [c for c in tf.graph.children(u) if c.thread != u.thread]
-        tf.append(ag, parents=[u], children=children)
-    n = tf.scale(all_of(on_device, by_phase("update")), 1.0 / num_workers)
-    return tf
+    """ZeRO-1/2 style sharding — see :class:`repro.core.optimize.ZeRO`."""
+    return ZeRO().apply(Scenario(graph, cost=cost, workers=num_workers))
 
 
 def what_if_overlap_collectives(graph: DependencyGraph) -> GraphTransform:
-    """Move device-lane collectives onto ICI channel lanes (async collectives),
-    keeping data dependencies — models compute/communication overlap."""
-    tf = GraphTransform(graph)
-    g = tf.graph
-    for t in list(g.lane_tasks(DEVICE_STREAM)):
-        if t.kind == TaskKind.COLLECTIVE:
-            parents = g.parents(t)
-            children = g.children(t)
-            nt = t.clone()
-            nt.thread = ici_channel("ici")
-            g.remove_task(t, bridge=True)
-            g.add_task(nt)
-            for p in parents:
-                if nt.uid != p.uid and p in g:
-                    g.add_edge(p, nt)
-            for c in children:
-                if nt.uid != c.uid and c in g:
-                    g.add_edge(nt, c)
-    return tf
+    """Async collectives — see
+    :class:`repro.core.optimize.OverlapCollectives`."""
+    return OverlapCollectives().apply(Scenario(graph))
 
 
 def what_if_straggler(graph: DependencyGraph, *, slowdown: float = 1.5,
                       affected_fraction: float = 1.0) -> GraphTransform:
-    """One slow replica in a synchronous job: every collective waits for the
-    straggler, so collective durations stretch by the straggler's extra
-    compute time (symmetric-worker model, paper §4.2.1 'Duration')."""
-    tf = GraphTransform(graph)
-    device_time = sum(t.duration for t in tf.select(on_device)
-                      if t.kind != TaskKind.COLLECTIVE)
-    extra = device_time * (slowdown - 1.0) * affected_fraction
-    colls = tf.select(lambda t: t.kind == TaskKind.COLLECTIVE)
-    if colls:
-        per = extra / len(colls)
-        for t in colls:
-            t.duration += per
-    return tf
+    """Amortized straggler model — see
+    :class:`repro.core.optimize.Straggler`."""
+    return Straggler(slowdown=slowdown,
+                     affected_fraction=affected_fraction).apply(
+        Scenario(graph))
 
 
-def what_if_bandwidth(graph: DependencyGraph, factor: float) -> GraphTransform:
-    """Paper Fig. 2 example: 'what if network bandwidth is N x'."""
-    tf = GraphTransform(graph)
-    tf.scale(lambda t: t.kind == TaskKind.COLLECTIVE, 1.0 / factor)
-    return tf
+def what_if_bandwidth(graph: DependencyGraph, factor: float
+                      ) -> GraphTransform:
+    """Paper Fig. 2 example — see :class:`repro.core.optimize.Bandwidth`."""
+    return Bandwidth(factor=factor).apply(Scenario(graph))
 
 
 def what_if_grad_accum(graph: DependencyGraph, microbatches: int
                        ) -> GraphTransform:
-    """Gradient accumulation: fwd+bwd repeat ``microbatches`` times per step,
-    collectives and update run once (amortized)."""
-    tf = GraphTransform(graph)
-    tf.scale(all_of(on_device, by_phase("fwd")), float(microbatches))
-    tf.scale(all_of(on_device, by_phase("bwd")), float(microbatches))
-    return tf
+    """Gradient accumulation — see
+    :class:`repro.core.optimize.GradAccum`."""
+    return GradAccum(microbatches=microbatches).apply(Scenario(graph))
 
 
 # --------------------------------------------------- cluster-routed what-ifs
-# The ``num_workers`` what-ifs above splice *analytical* collective costs into
-# one worker's graph — every worker collapses onto one timeline.  The
-# ``cluster_*`` functions below route the same transformations through
-# :class:`repro.core.cluster.ClusterGraph`: the transformed single-worker
-# graph is replicated across N (possibly heterogeneous) workers, collectives
-# become cross-worker ring/hierarchical structures, and one global simulation
-# yields a per-worker :class:`SimResult` breakdown — answering questions the
+# The ``num_workers`` what-ifs above splice *analytical* collective costs
+# into one worker's graph — every worker collapses onto one timeline.  The
+# ``cluster_*`` wrappers below set a :class:`WorkerSpec` list on the
+# Scenario, which routes the same registered optimizations through
+# :class:`repro.core.cluster.ClusterGraph`: one global simulation with a
+# per-worker :class:`SimResult` breakdown — answering questions the
 # single-graph path cannot (stragglers, skewed links, mixed generations).
-
-_worker_specs = _as_specs       # int N or explicit WorkerSpec list, validated
-
 
 def cluster_what_if_distributed(graph: DependencyGraph,
                                 layer_grad_bytes: Dict[str, float],
@@ -570,13 +220,10 @@ def cluster_what_if_distributed(graph: DependencyGraph,
     collective time); heterogeneous specs answer the questions the
     single-graph path cannot.
     """
-    specs = _worker_specs(workers)
-    cost = cost or CostModel()
-    tf = what_if_distributed(graph, layer_grad_bytes, num_workers=len(specs),
-                             bucket_bytes=bucket_bytes, cost=cost)
-    cg = ClusterGraph.build(tf.graph, specs, cost=cost,
-                            collective_mode=collective_mode)
-    return cg.simulate()
+    s = Scenario(graph, cost=cost, layer_grad_bytes=layer_grad_bytes,
+                 workers=_worker_specs(workers),
+                 collective_mode=collective_mode)
+    return s.predict(DDP(bucket_bytes=bucket_bytes)).cluster
 
 
 def cluster_what_if_zero(graph: DependencyGraph,
@@ -585,14 +232,10 @@ def cluster_what_if_zero(graph: DependencyGraph,
                          collective_mode: str = "ring") -> ClusterResult:
     """ZeRO sharding simulated on the global graph: the reduce-scatter and
     param all-gather each become cross-worker ring legs."""
-    specs = _worker_specs(workers)
-    cost = cost or CostModel()
-    tf = what_if_distributed(graph, layer_grad_bytes, num_workers=len(specs),
-                             cost=cost)
-    tf2 = what_if_zero(tf.graph, num_workers=len(specs), cost=cost)
-    cg = ClusterGraph.build(tf2.graph, specs, cost=cost,
-                            collective_mode=collective_mode)
-    return cg.simulate()
+    s = Scenario(graph, cost=cost, layer_grad_bytes=layer_grad_bytes,
+                 workers=_worker_specs(workers),
+                 collective_mode=collective_mode)
+    return s.predict(DDP() | ZeRO()).cluster
 
 
 def cluster_what_if_p3(graph: DependencyGraph,
@@ -600,18 +243,17 @@ def cluster_what_if_p3(graph: DependencyGraph,
                        workers, *, bandwidth: float,
                        slice_bytes: float = 4 * 1024 * 1024,
                        priority: bool = True,
-                       cost: Optional[CostModel] = None) -> ClusterResult:
+                       cost: Optional[CostModel] = None,
+                       collective_mode: str = "ring") -> ClusterResult:
     """P3 on the global graph: pushes stay worker-local (preserving the
     overlap with late backprop); pulls gate on every worker's push via the
     parameter-server aggregation barrier.  The priority schedule carries
     over to the global simulation unchanged."""
-    specs = _worker_specs(workers)
-    cost = cost or CostModel()
-    tf = what_if_p3(graph, layer_grad_bytes, len(specs), bandwidth=bandwidth,
-                    slice_bytes=slice_bytes, priority=priority, cost=cost)
-    cg = ClusterGraph.build(tf.graph, specs, cost=cost,
-                            schedule=tf.schedule)
-    return cg.simulate()
+    s = Scenario(graph, cost=cost, layer_grad_bytes=layer_grad_bytes,
+                 workers=_worker_specs(workers),
+                 collective_mode=collective_mode)
+    return s.predict(P3(bandwidth=bandwidth, slice_bytes=slice_bytes,
+                        priority=priority)).cluster
 
 
 def cluster_what_if_straggler(graph: DependencyGraph,
@@ -635,7 +277,8 @@ def cluster_what_if_bandwidth(graph: DependencyGraph,
                               layer_grad_bytes: Dict[str, float],
                               num_workers: int, *,
                               scales: Sequence[float],
-                              cost: Optional[CostModel] = None
+                              cost: Optional[CostModel] = None,
+                              collective_mode: str = "ring"
                               ) -> ClusterResult:
     """Skewed per-worker link bandwidth (paper Fig. 2's sweep, made
     per-link): ``scales[i]`` throttles the ring links adjacent to worker i,
@@ -644,4 +287,5 @@ def cluster_what_if_bandwidth(graph: DependencyGraph,
         raise ValueError("need one bandwidth scale per worker")
     specs = [WorkerSpec(bandwidth_scale=s) for s in scales]
     return cluster_what_if_distributed(graph, layer_grad_bytes, specs,
-                                       cost=cost)
+                                       cost=cost,
+                                       collective_mode=collective_mode)

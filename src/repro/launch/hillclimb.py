@@ -5,9 +5,21 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
     PYTHONPATH=src python -m repro.launch.hillclimb --arch tinyllama-1.1b \
         --shape train_4k --tag iter2 --set layout=dp --set remat=dots
+
+With ``--search-whatif N`` the driver instead compiles the cell once and
+greedily hill-climbs the *optimization registry* (repro.core.optimize):
+every default-constructible registered optimization is a candidate, and the
+best-stack-so-far grows one optimization per round (at most N) while the
+predicted makespan keeps dropping.  Extra candidates with parameters come
+from repeatable ``--candidate name:param=value`` specs.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --arch tinyllama-1.1b \
+        --shape train_4k --tag whatif3 --search-whatif 3 \
+        --candidate dgc:compression=0.01
 """
 
 import argparse
+import json
 
 
 def parse_value(v: str):
@@ -23,9 +35,66 @@ def parse_value(v: str):
     return v
 
 
+def search_whatif(args, cfg) -> None:
+    """Greedy registry search over the compiled step's dependency graph."""
+    from repro.core.costmodel import CostModel
+    from repro.core.hlo import parse_hlo_module
+    from repro.core.optimize import default_candidates, greedy_search, \
+        parse_stack
+    from repro.launch.cell import build_cell
+    from repro.launch.dryrun import mesh_topology
+    from repro.launch.mesh import make_production_mesh
+    # lazy: perf_report imports this module at top level (parse_value)
+    from repro.launch.perf_report import build_scenario
+    from repro.configs import registry as cfg_registry
+    from repro import compat
+
+    shape = cfg_registry.SHAPES[args.shape]
+    multi = args.mesh == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    cost = CostModel(topo=mesh_topology(multi))
+    with compat.set_mesh(mesh):
+        cell = build_cell(cfg, shape, mesh)
+        compiled = cell.lower().compile()
+    module = parse_hlo_module(compiled.as_text())
+    scenario, _ = build_scenario(module, cfg, cost,
+                                 workers=args.cluster or 1,
+                                 straggler=args.straggler)
+
+    candidates = default_candidates(scenario)
+    for spec in args.candidate:
+        opt, over = parse_stack(spec)
+        if over:
+            raise SystemExit(f"--candidate {spec!r}: scenario overrides "
+                             f"belong in --cluster/--straggler")
+        candidates.append(opt)
+    best, trail = greedy_search(scenario, max_depth=args.search_whatif,
+                                candidates=candidates)
+    base = scenario.baseline().makespan
+    print(f"baseline: {base*1e3:.3f} ms; searched {len(candidates)} "
+          f"registry candidates to depth {args.search_whatif}")
+    for i, pred in enumerate(trail):
+        print(f"round {i+1}: {pred.optimization.spec():60s} "
+              f"{pred.predicted*1e3:10.3f} ms  ({pred.speedup:.2f}x)")
+    if best is None:
+        print("no registered optimization improves this scenario")
+    rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+           "status": "ok", "mode": "whatif_search",
+           "baseline_ms": base * 1e3,
+           "best_stack": best.spec() if best is not None else None,
+           "trail": [{"stack": p.optimization.spec(),
+                      "predicted_ms": p.predicted * 1e3,
+                      "speedup": p.speedup} for p in trail]}
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__{args.mesh}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"wrote {path}")
+
+
 def main() -> None:
     from repro.configs import registry
-    from repro.launch.dryrun import run_cell
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -35,6 +104,16 @@ def main() -> None:
     ap.add_argument("--set", action="append", default=[],
                     help="cfg override key=value (repeatable)")
     ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--search-whatif", type=int, default=0,
+                    help="greedy-search the optimization registry to this "
+                         "stack depth instead of running the cell")
+    ap.add_argument("--candidate", action="append", default=[],
+                    help="extra search candidate as a registry spec, e.g. "
+                         "dgc:compression=0.01 (repeatable)")
+    ap.add_argument("--cluster", type=int, default=0,
+                    help="search on the N-worker cluster route")
+    ap.add_argument("--straggler", default="",
+                    help="IDX:SLOWDOWN cluster straggler (with --cluster)")
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch)
@@ -45,6 +124,10 @@ def main() -> None:
     if overrides:
         cfg = cfg.with_(**overrides)
     print(f"overrides: {overrides}")
+    if args.search_whatif:
+        search_whatif(args, cfg)
+        return
+    from repro.launch.dryrun import run_cell
     run_cell(args.arch, args.shape, args.mesh == "multi",
              out_dir=args.out, cfg_override=cfg, tag=args.tag)
 

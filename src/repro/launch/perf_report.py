@@ -126,34 +126,44 @@ def format_cluster_report(result: ClusterResult, *, title: str = "cluster",
     return "\n".join(lines)
 
 
-def cluster_whatif_report(module, cfg, cost, *, workers: int,
-                          straggler: str = "") -> str:
-    """Cluster-simulate the compiled step across ``workers`` replicas.
+def _parse_straggler(straggler: str, workers: int):
+    try:
+        idx_s, slow_s = straggler.split(":")
+        idx, slow = int(idx_s), float(slow_s)
+    except ValueError:
+        raise SystemExit(
+            f"--straggler expects IDX:SLOWDOWN (e.g. 0:2.0), "
+            f"got {straggler!r}")
+    if not 0 <= idx < workers:
+        raise SystemExit(
+            f"--straggler index {idx} out of range for {workers} workers")
+    return idx, slow
+
+
+def build_scenario(module, cfg, cost, *, workers=1, straggler: str = ""):
+    """Extract the compiled step's graph into an optimize.Scenario.
 
     Gradient buckets are keyed by the layer tags that actually appear on the
     graph's backward tasks so the all-reduce legs gate on real backprop
     (wait-free-backprop wiring); total payload is the config's parameter
     bytes.  If the trace carries no layer tags (fully scanned/fused module),
-    the fallback is one synthetic bucket list — the report then shows
+    the fallback is one synthetic bucket list — cluster reports then show
     per-worker compute/comm splits but no backprop-overlap coupling.
+
+    ``workers``: 1 keeps the analytical single-graph route; an int > 1 (or
+    a ``--straggler`` spec) builds a WorkerSpec list so predictions route
+    through the global ClusterGraph.
     """
-    from repro.core import whatif
-    # validate the straggler spec before the (expensive) graph extraction
-    specs = [WorkerSpec() for _ in range(workers)]
-    title = f"cluster x{workers}"
-    if straggler:
-        try:
-            idx_s, slow_s = straggler.split(":")
-            idx, slow = int(idx_s), float(slow_s)
-        except ValueError:
-            raise SystemExit(
-                f"--straggler expects IDX:SLOWDOWN (e.g. 0:2.0), "
-                f"got {straggler!r}")
-        if not 0 <= idx < workers:
-            raise SystemExit(
-                f"--straggler index {idx} out of range for {workers} workers")
-        specs[idx] = WorkerSpec(compute_scale=slow)
-        title += f" (w{idx} {slow}x slower)"
+    from repro.core.optimize import Scenario
+    title = ""
+    if isinstance(workers, int) and workers > 1:
+        specs = [WorkerSpec() for _ in range(workers)]
+        title = f"cluster x{workers}"
+        if straggler:
+            idx, slow = _parse_straggler(straggler, workers)
+            specs[idx] = WorkerSpec(compute_scale=slow)
+            title += f" (w{idx} {slow}x slower)"
+        workers = specs
     graph = extract_graph(module, cost)
     layers = sorted({t.layer for t in graph.tasks()
                      if t.layer and t.phase == "bwd"})
@@ -161,8 +171,58 @@ def cluster_whatif_report(module, cfg, cost, *, workers: int,
         layers = [f"layer{i}" for i in range(max(1, cfg.n_layers))]
     per_layer = 2.0 * active_params(cfg) / len(layers)  # bf16 grads
     grads = {l: per_layer for l in layers}
-    result = whatif.cluster_what_if_distributed(graph, grads, specs, cost=cost)
-    return format_cluster_report(result, title=title)
+    return Scenario(graph, cost=cost, layer_grad_bytes=grads,
+                    workers=workers), title
+
+
+def cluster_whatif_report(module, cfg, cost, *, workers: int,
+                          straggler: str = "") -> str:
+    """Cluster-simulate the compiled step across ``workers`` replicas."""
+    # validate the straggler spec before the (expensive) graph extraction
+    if straggler:
+        _parse_straggler(straggler, workers)
+    from repro.core.optimize import DDP
+    scenario, title = build_scenario(module, cfg, cost, workers=workers,
+                                     straggler=straggler)
+    return format_cluster_report(scenario.predict(DDP()).cluster, title=title)
+
+
+def whatif_stack_report(module, cfg, cost, spec: str, *, workers: int = 0,
+                        straggler: str = "") -> str:
+    """Evaluate a registry-parsed optimization stack on the compiled step.
+
+    ``spec`` is the CLI form parsed against the optimization registry, e.g.
+    ``amp,ddp:workers=16,zero`` — commas stack optimizations (applied left
+    to right), colons attach ``param=value`` pairs; a ``workers=N`` pair
+    sets the scenario's analytical worker count.  Combine with
+    ``--cluster N`` to route the same stack through the global ClusterGraph
+    and get the per-worker table.
+    """
+    from repro.core.optimize import parse_stack
+    import dataclasses as _dc
+    opt, overrides = parse_stack(spec)     # fail fast on bad specs
+    if workers and "workers" in overrides:
+        raise SystemExit(
+            f"--what-if sets workers={overrides['workers']} but --cluster "
+            f"{workers} was also given; pick one (--cluster routes through "
+            f"the global ClusterGraph, workers=N in the spec is the "
+            f"analytical route)")
+    scenario, title = build_scenario(module, cfg, cost,
+                                     workers=workers or 1,
+                                     straggler=straggler)
+    if overrides:
+        scenario = _dc.replace(scenario, **overrides)
+    pred = scenario.predict(opt)
+    lines = [f"== what-if {spec} =="]
+    for o in (opt.opts if hasattr(opt, "opts") else (opt,)):
+        lines.append(f"   {o.spec()}")
+    lines.append(f"baseline  : {pred.baseline * 1e3:10.3f} ms")
+    lines.append(f"predicted : {pred.predicted * 1e3:10.3f} ms "
+                 f"({pred.speedup:.2f}x)")
+    if pred.cluster is not None:
+        lines.append(format_cluster_report(
+            pred.cluster, title=title or f"cluster x{len(pred.cluster.workers)}"))
+    return "\n".join(lines)
 
 
 def main() -> None:
@@ -177,6 +237,10 @@ def main() -> None:
                     help="also cluster-simulate N data-parallel workers")
     ap.add_argument("--straggler", default="",
                     help="IDX:SLOWDOWN, e.g. 0:2.0 (with --cluster)")
+    ap.add_argument("--what-if", default="", dest="what_if",
+                    help="registry-parsed optimization stack, e.g. "
+                         "'amp,ddp:workers=16,zero' (see repro.core.optimize;"
+                         " combine with --cluster for per-worker breakdown)")
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch)
@@ -211,14 +275,19 @@ def main() -> None:
     print("compiled    :", format_row(args.arch, args.shape, args.mesh, base))
     print("with flash  :", format_row(args.arch, args.shape, args.mesh,
                                       modeled))
-    if args.cluster:
+    if args.what_if:
+        print(whatif_stack_report(module, cfg, cost, args.what_if,
+                                  workers=args.cluster,
+                                  straggler=args.straggler))
+    elif args.cluster:
         print(cluster_whatif_report(module, cfg, cost, workers=args.cluster,
                                     straggler=args.straggler))
     print(f"attention-loop bytes replaced: {tot['attn_bytes']/1e9:.1f} GB "
           f"-> flash kernel {fb/1e9:.2f} GB per device")
     os.makedirs(args.out, exist_ok=True)
     rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
-           "status": "ok", "modeled": "flash_attention_substitution",
+           "status": "ok", "what_if": args.what_if or None,
+           "modeled": "flash_attention_substitution",
            "attn_bytes_removed": tot["attn_bytes"],
            "flash_bytes_added": fb,
            "roofline_compiled": base, "roofline": modeled}

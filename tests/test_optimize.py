@@ -1,0 +1,292 @@
+"""Unified optimization/scenario API (repro.core.optimize) acceptance tests.
+
+Covers the composition semantics the ISSUE pins down:
+
+* ``Stack`` associativity (flattening) and ``A | B`` == manual
+  ``what_if_a`` -> ``what_if_b`` chaining to float precision;
+* registry round-trip: every registered optimization is constructible from
+  the CLI's ``name:param=value`` string form and survives spec() -> parse;
+* sweep-reuse equivalence: swept points match independent per-point
+  rebuilds (both cluster-route retunes and single-graph retunes);
+* ``collective_mode`` threads through every cluster wrapper (the bug the
+  old free functions had).
+"""
+
+import pytest
+
+from repro.core import (Scenario, Stack, WorkerSpec, whatif,
+                        available, get_optimization, parse_stack,
+                        OptimizationError)
+from repro.core.optimize import (DDP, AMP, Bandwidth, ZeRO, Straggler,
+                                 default_candidates, greedy_search,
+                                 straggler_specs, uniform_bandwidth_specs)
+from synthgraphs import training_step_graph
+
+LAYERS = 6
+GRADS = {f"l{i}": 30e6 for i in range(LAYERS)}
+ACTS = {f"l{i}": 4e6 for i in range(LAYERS)}
+
+# constructor kwargs for registered optimizations with required params —
+# the registry round-trip test fails if a new registered opt is missing
+REQUIRED = {
+    "p3": {"bandwidth": 5e9},
+    "blueconnect": {"axes": (("data", 4), ("model", 4))},
+    "remove_layer": {"layer_pattern": "l1"},
+    "scale_layer": {"layer_pattern": "l1", "scale": 0.5},
+    "offload": {"layer_pattern": "l"},
+    "gist": {"layer_pattern": "l"},
+}
+
+
+@pytest.fixture()
+def graph():
+    return training_step_graph(layers=LAYERS)
+
+
+@pytest.fixture()
+def scenario(graph):
+    return Scenario(graph, layer_grad_bytes=GRADS, activation_bytes=ACTS,
+                    workers=8)
+
+
+class TestRegistry:
+    def test_every_registered_opt_constructible(self):
+        for name in available():
+            cls = get_optimization(name)
+            opt = cls(**REQUIRED.get(name, {}))
+            assert opt.name == name
+
+    def test_roundtrip_spec_parse(self):
+        """spec() -> parse_stack() reproduces every registered opt."""
+        for name in available():
+            cls = get_optimization(name)
+            opt = cls(**REQUIRED.get(name, {}))
+            parsed, overrides = parse_stack(opt.spec())
+            assert parsed == opt, name
+            assert overrides == {}
+
+    def test_cli_stack_form(self):
+        opt, over = parse_stack("amp,ddp:workers=16,zero")
+        assert isinstance(opt, Stack)
+        assert [o.name for o in opt.opts] == ["amp", "ddp", "zero"]
+        assert over == {"workers": 16}
+
+    def test_cli_param_typing(self):
+        opt, _ = parse_stack("ddp:bucket_bytes=1e6")
+        assert opt.bucket_bytes == pytest.approx(1e6)
+        opt, _ = parse_stack("amp:matmul_speedup=2")
+        assert isinstance(opt.matmul_speedup, float)
+
+    def test_unknown_name_and_param_raise(self):
+        with pytest.raises(OptimizationError):
+            parse_stack("warp_drive")
+        with pytest.raises(OptimizationError):
+            parse_stack("amp:warp=9")
+
+    def test_aliases_resolve(self):
+        assert get_optimization("fusedadam") is get_optimization(
+            "fused_optimizer")
+        assert get_optimization("vdnn") is get_optimization("offload")
+        assert get_optimization("distributed") is get_optimization("ddp")
+
+
+class TestComposition:
+    def test_stack_flattens_associatively(self):
+        a, b, c = AMP(), Bandwidth(factor=2.0), ZeRO()
+        assert ((a | b) | c) == (a | (b | c)) == Stack(a, b, c)
+
+    def test_stacked_prediction_associative(self, scenario):
+        a, b, c = AMP(), DDP(), ZeRO()
+        left = scenario.predict((a | b) | c).predicted
+        right = scenario.predict(a | (b | c)).predicted
+        assert left == right
+
+    def test_amp_ddp_stack_matches_manual_chain(self, graph):
+        """`AMP | DDP` == what_if_amp -> what_if_distributed chaining."""
+        s = Scenario(graph, layer_grad_bytes=GRADS, workers=16)
+        pred = s.predict(AMP() | DDP())
+        tf1 = whatif.what_if_amp(graph)
+        tf2 = whatif.what_if_distributed(tf1.graph, GRADS, 16)
+        manual = tf2.simulate().makespan
+        assert pred.predicted == pytest.approx(manual, rel=1e-12)
+
+    def test_wrapper_equals_registry_route(self, graph):
+        via_wrapper = whatif.what_if_amp(graph).simulate().makespan
+        via_registry = Scenario(graph).predict("amp").predicted
+        assert via_wrapper == via_registry
+
+    def test_prediction_fields(self, scenario):
+        pred = scenario.predict("ddp")
+        assert pred.baseline == scenario.baseline().makespan
+        assert pred.speedup == pred.baseline / pred.predicted
+        assert pred.cluster is None     # workers=8 int -> analytical route
+
+    def test_cluster_route_by_worker_spec(self, graph):
+        s = Scenario(graph, layer_grad_bytes=GRADS,
+                     workers=[WorkerSpec() for _ in range(4)])
+        pred = s.predict("ddp")
+        assert pred.cluster is not None
+        assert len(pred.cluster.per_worker) == 4
+        # uniform cluster == analytical single-graph prediction
+        single = Scenario(graph, layer_grad_bytes=GRADS,
+                          workers=4).predict("ddp")
+        assert pred.predicted == pytest.approx(single.predicted, rel=1e-9)
+
+    def test_missing_byte_maps_raise(self, graph):
+        with pytest.raises(OptimizationError):
+            Scenario(graph).predict("ddp")
+        with pytest.raises(OptimizationError):
+            Scenario(graph).predict("gist:layer_pattern=l")
+
+
+class TestSweep:
+    def test_cluster_bandwidth_sweep_matches_rebuilds(self, graph):
+        s = Scenario(graph, layer_grad_bytes=GRADS,
+                     workers=[WorkerSpec() for _ in range(6)])
+        grid = {"workers": uniform_bandwidth_specs(
+            6, [0.25, 0.5, 1.0, 2.0, 4.0])}
+        reused = s.sweep("ddp", grid, reuse=True)
+        rebuilt = s.sweep("ddp", grid, reuse=False)
+        assert [p.predicted for p in reused] == \
+            [p.predicted for p in rebuilt]
+        # sanity: the retuned path matches the legacy wrapper too
+        legacy = whatif.cluster_what_if_bandwidth(
+            graph, GRADS, 6, scales=[0.5] * 6).makespan
+        assert reused[1].predicted == pytest.approx(legacy, rel=1e-12)
+
+    def test_cluster_straggler_sweep_matches_rebuilds(self, graph):
+        s = Scenario(graph, layer_grad_bytes=GRADS,
+                     workers=[WorkerSpec() for _ in range(4)])
+        grid = {"workers": straggler_specs(4, [1.0, 1.5, 2.0, 3.0])}
+        reused = s.sweep("ddp", grid, reuse=True)
+        rebuilt = s.sweep("ddp", grid, reuse=False)
+        assert [p.predicted for p in reused] == \
+            [p.predicted for p in rebuilt]
+        # slower straggler -> larger makespan
+        ms = [p.predicted for p in reused]
+        assert ms == sorted(ms)
+
+    def test_single_graph_retune_sweep(self, graph):
+        """Opts with a retune hook (bandwidth, straggler) rescale in place."""
+        s = Scenario(whatif.what_if_distributed(graph, GRADS, 8).graph)
+        for opt, grid in [
+                (Bandwidth(factor=1.0),
+                 {"factor": [0.25, 0.5, 1.0, 2.0, 4.0]}),
+                (Straggler(), {"slowdown": [1.0, 1.5, 2.0]})]:
+            reused = s.sweep(opt, grid, reuse=True)
+            rebuilt = s.sweep(opt, grid, reuse=False)
+            for a, b in zip(reused, rebuilt):
+                assert a.predicted == pytest.approx(b.predicted, rel=1e-9)
+
+    def test_opt_param_grid_rebuilds(self, graph):
+        """Structural params (bucket_bytes) fall back to rebuild per point."""
+        s = Scenario(graph, layer_grad_bytes=GRADS, workers=8)
+        preds = s.sweep("ddp", {"bucket_bytes": [1e6, 30e6, 300e6]})
+        assert len(preds) == 3
+        assert all(p.point["bucket_bytes"] for p in preds)
+        rebuilt = s.sweep("ddp", {"bucket_bytes": [1e6, 30e6, 300e6]},
+                          reuse=False)
+        assert [p.predicted for p in preds] == \
+            [p.predicted for p in rebuilt]
+
+    def test_worker_count_grid(self, graph):
+        s = Scenario(graph, layer_grad_bytes=GRADS)
+        preds = s.sweep("ddp", {"workers": [2, 4, 8]})
+        assert [p.point["workers"] for p in preds] == [2, 4, 8]
+        for p, w in zip(preds, [2, 4, 8]):
+            manual = whatif.what_if_distributed(
+                graph, GRADS, w).simulate().makespan
+            assert p.predicted == manual
+
+    def test_explicit_point_list_and_bad_key(self, graph):
+        s = Scenario(graph, layer_grad_bytes=GRADS, workers=4)
+        preds = s.sweep("ddp", [{"bucket_bytes": 1e6}, {"workers": 8}])
+        assert len(preds) == 2
+        with pytest.raises(OptimizationError):
+            s.sweep("ddp", {"warp": [1, 2]})
+
+
+class TestCollectiveModeThreading:
+    """Satellite fix: cluster_what_if_bandwidth / _p3 used to drop
+    collective_mode on the floor."""
+
+    def test_bandwidth_threads_mode(self, graph):
+        ring = whatif.cluster_what_if_bandwidth(
+            graph, GRADS, 4, scales=[1.0, 0.25, 1.0, 1.0])
+        fused = whatif.cluster_what_if_bandwidth(
+            graph, GRADS, 4, scales=[1.0, 0.25, 1.0, 1.0],
+            collective_mode="fused")
+        # ring: the slow link throttles legs crossing it; fused: only the
+        # slow worker's own analytical collective stretches — different
+        # numbers prove the kwarg reaches ClusterGraph.build
+        assert ring.makespan != pytest.approx(fused.makespan, rel=1e-6)
+
+    def test_p3_accepts_mode(self, graph):
+        res = whatif.cluster_what_if_p3(graph, GRADS, 4, bandwidth=5e9,
+                                        collective_mode="fused")
+        assert res.makespan > 0
+
+    def test_all_cluster_wrappers_accept_mode(self, graph):
+        import inspect
+        for fn in (whatif.cluster_what_if_distributed,
+                   whatif.cluster_what_if_zero, whatif.cluster_what_if_p3,
+                   whatif.cluster_what_if_straggler,
+                   whatif.cluster_what_if_bandwidth):
+            assert "collective_mode" in inspect.signature(fn).parameters, \
+                fn.__name__
+
+
+class TestRetune:
+    def test_retune_matches_fresh_build_exactly(self, graph):
+        from repro.core import ClusterGraph
+        tf = whatif.what_if_distributed(graph, GRADS, 6)
+        cg = ClusterGraph.build(tf.graph, 6)
+        skew = [WorkerSpec(bandwidth_scale=0.5, compute_scale=1.5)
+                if i == 2 else WorkerSpec() for i in range(6)]
+        retuned = cg.retune(skew).simulate()
+        fresh = ClusterGraph.build(tf.graph, skew).simulate()
+        assert retuned.makespan == fresh.makespan
+        assert retuned.worker_makespans() == fresh.worker_makespans()
+
+    def test_retune_rejects_count_change_and_hierarchical(self, graph):
+        from repro.core import ClusterGraph, GraphError
+        tf = whatif.what_if_distributed(graph, GRADS, 4)
+        cg = ClusterGraph.build(tf.graph, 4)
+        with pytest.raises(GraphError):
+            cg.retune(8)
+        hier = ClusterGraph.build(tf.graph,
+                                  [WorkerSpec(pod=i % 2) for i in range(4)],
+                                  collective_mode="hierarchical")
+        assert not hier.retunable
+        with pytest.raises(GraphError):
+            hier.retune([WorkerSpec(pod=i % 2) for i in range(4)])
+
+    def test_stale_result_breakdown_survives_retune(self, graph):
+        """A lazily-split ClusterResult must reflect the durations at its
+        own simulate() time, not a later retune's."""
+        from repro.core import ClusterGraph
+        tf = whatif.what_if_distributed(graph, GRADS, 4)
+        cg = ClusterGraph.build(tf.graph, 4)
+        first = cg.simulate()
+        eager = ClusterGraph.build(tf.graph, 4).simulate()
+        _ = eager.per_worker        # split before any retune
+        cg.retune([WorkerSpec(compute_scale=3.0)] + [WorkerSpec()] * 3)
+        cg.simulate()
+        for i in range(4):
+            assert first.per_worker[i].thread_busy == \
+                eager.per_worker[i].thread_busy
+
+
+class TestGreedySearch:
+    def test_search_improves_and_stacks(self, scenario):
+        best, trail = greedy_search(scenario, max_depth=3)
+        assert best is not None
+        assert trail[-1].predicted < scenario.baseline().makespan
+        # monotone improvement round over round
+        ms = [p.predicted for p in trail]
+        assert ms == sorted(ms, reverse=True)
+
+    def test_candidates_skip_required_param_opts(self, scenario):
+        names = {c.name for c in default_candidates(scenario)}
+        assert "p3" not in names        # requires bandwidth
+        assert "amp" in names
