@@ -1,0 +1,88 @@
+"""Trace-import throughput: the traceio pipeline must stay O(events).
+
+Workload: synthetic 4-worker trace sets (``repro.traceio.synthetic``)
+written as native JSONL — 50k events total (the ISSUE's 4-worker x ~12.5k
+events/worker set) against a 10k-event control.  Timed end-to-end through
+``load_trace_dir`` (parse + clock alignment + per-worker graph
+reconstruction) and through ``ClusterGraph.from_traces`` (collective
+matching + global wiring).
+
+Acceptance (wired into CI):
+
+* scaling gate: per-event import cost at 50k events is <= 2.5x the
+  per-event cost at 10k events — a super-linear (O(n^2)) regression in
+  parsing, flow binding, alignment, or matching blows straight past that;
+* floor gate: import sustains >= 10k events/s (parse-bound; catches
+  accidentally quadratic hot loops even if both sizes regress together).
+
+CSV: stage,workers,events,seconds,events_per_sec,per_event_vs_small
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from repro.core import ClusterGraph, CostModel
+from repro.traceio import load_trace_dir, write_synthetic_trace_dir
+
+from benchmarks.common import fmt_csv
+
+WORKERS = 4
+# events per worker = 4*layers + 2  =>  totals of 10_000 and 50_000
+SIZES = {"small": 624, "large": 3124}
+SCALING_GATE = 2.5
+FLOOR_EVENTS_PER_SEC = 10_000.0
+
+
+def _events_total(layers: int) -> int:
+    return WORKERS * (4 * layers + 2)
+
+
+def _time_import(trace_dir: str):
+    t0 = time.perf_counter()
+    imp = load_trace_dir(trace_dir)
+    t_load = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    cg = ClusterGraph.from_traces(imp, cost=CostModel())
+    t_build = time.perf_counter() - t0
+    return t_load, t_build, imp, cg
+
+
+def run() -> str:
+    rows = []
+    per_event = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        for name, layers in SIZES.items():
+            d = os.path.join(tmp, name)
+            write_synthetic_trace_dir(
+                d, WORKERS, layers=layers,
+                compute_scales=[1.5, 1.0, 1.0, 1.0],
+                clock_offsets=[0.0, 0.05, -0.03, 0.01])
+            events = _events_total(layers)
+            # best of 2 so shared-machine load drift cancels out
+            t_load, t_build, imp, _ = _time_import(d)
+            t2_load, t2_build, _, _ = _time_import(d)
+            t_load, t_build = min(t_load, t2_load), min(t_build, t2_build)
+            assert imp.num_workers == WORKERS
+            per_event[name] = t_load / events
+            rows.append(["load_trace_dir", WORKERS, events, f"{t_load:.3f}",
+                         f"{events / t_load:.0f}",
+                         f"{per_event[name] / per_event['small']:.2f}"])
+            rows.append(["from_traces", WORKERS, events, f"{t_build:.3f}",
+                         f"{events / t_build:.0f}", ""])
+    ratio = per_event["large"] / per_event["small"]
+    assert ratio <= SCALING_GATE, (
+        f"trace import is super-linear: 50k-event per-event cost is "
+        f"{ratio:.2f}x the 10k-event cost (acceptance: <= {SCALING_GATE}x)")
+    throughput = 1.0 / per_event["large"]
+    assert throughput >= FLOOR_EVENTS_PER_SEC, (
+        f"trace import sustains only {throughput:.0f} events/s "
+        f"(acceptance: >= {FLOOR_EVENTS_PER_SEC:.0f})")
+    return fmt_csv(rows, ["stage", "workers", "events", "seconds",
+                          "events_per_sec", "per_event_vs_small"])
+
+
+if __name__ == "__main__":
+    print(run())

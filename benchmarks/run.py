@@ -21,6 +21,7 @@ BENCHES = {
     "roofline": "benchmarks.bench_roofline",
     "sim_engine": "benchmarks.bench_sim",
     "sweep_reuse": "benchmarks.bench_sweep",
+    "traceio_import": "benchmarks.bench_traceio",
 }
 
 

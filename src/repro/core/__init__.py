@@ -15,6 +15,10 @@ The unified what-if API (:mod:`repro.core.optimize`) is the preferred
 surface: optimizations are registered, typed, composable via ``|``, and
 ``Scenario.sweep`` evaluates parameter grids reusing one ClusterGraph
 build.  The ``whatif.what_if_*`` functions remain as thin wrappers.
+``Scenario(trace_dir=...)`` (and ``ClusterGraph.from_traces``) runs the
+same registry on *real* per-worker profiler traces imported via
+:mod:`repro.traceio` (Chrome trace-event JSON / native JSONL, dPRO-style
+clock alignment, asymmetric per-worker graphs).
 
 Simulation engines: :func:`simulate` is the O(E log V) event-driven heap
 engine; :func:`simulate_reference` keeps the paper's Algorithm 1 frontier

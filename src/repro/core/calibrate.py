@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .costmodel import CostModel, MeshTopology
+from .costmodel import CollectiveModel, CostModel, MeshTopology
 from .task import HardwareSpec
 
 
@@ -84,18 +84,73 @@ def measure_collective_bandwidth(num_devices: Optional[int] = None,
     return 2 * (n - 1) / n * payload / max(t, 1e-9)
 
 
+def hop_latency_from_measurement(t_small: float, payload_bytes: float,
+                                 num_devices: int, bandwidth: float) -> float:
+    """Per-ring-step latency implied by one tiny-payload all-reduce time.
+
+    The ring model (``CollectiveModel.axis_time``) predicts
+    ``t = 2*(n-1)/n * payload/bw + 2*(n-1)*hop``; a tiny payload makes the
+    latency term dominant, so subtracting the measured-bandwidth transfer
+    term and dividing by the hop count recovers ``hop`` — the collective
+    analogue of deriving ``op_overhead`` from a measured no-op dispatch.
+    Degenerate inputs (n < 2, negative residual from noise) fall back to the
+    analytical default.
+    """
+    if num_devices < 2 or t_small <= 0:
+        return CollectiveModel.HOP_LATENCY
+    transfer = 2 * (num_devices - 1) / num_devices * payload_bytes \
+        / max(bandwidth, 1e-9)
+    hop = (t_small - transfer) / (2 * (num_devices - 1))
+    return hop if hop > 0 else CollectiveModel.HOP_LATENCY
+
+
+def measure_collective_hop_latency(num_devices: Optional[int] = None,
+                                   payload_kb: int = 4,
+                                   bandwidth: Optional[float] = None) -> float:
+    """Measured per-ring-step latency of the local backend's collectives.
+
+    Times a tiny (``payload_kb``) all-reduce — latency-dominated — and
+    solves the ring formula for the per-hop term
+    (:func:`hop_latency_from_measurement`).  This is the ROADMAP item:
+    ring-leg ``HOP_LATENCY`` is calibrated against the measured local
+    collective path exactly the way compute durations already are, so
+    cluster ring legs land in local wall-clock units too.  Single-device
+    backends return the analytical default.
+    """
+    devices = jax.devices()
+    n = num_devices or len(devices)
+    if n < 2:
+        return CollectiveModel.HOP_LATENCY
+    bw = bandwidth if bandwidth is not None \
+        else measure_collective_bandwidth(n)
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro import compat
+    mesh = compat.make_mesh((n,), ("d",))
+    elems = max(payload_kb * 1024 // 4, 1)
+    x = jnp.ones((n, elems), jnp.float32)
+    x = jax.device_put(x, NamedSharding(mesh, P("d", None)))
+    f = jax.jit(lambda v: jnp.sum(v, axis=0),
+                out_shardings=NamedSharding(mesh, P(None)))
+    t_small = _time(f, x)
+    return hop_latency_from_measurement(t_small, elems * 4, n, bw)
+
+
 def calibrated_cost_model(num_devices: int = 1) -> CostModel:
     """CostModel whose constants are the *local* backend's measured rates."""
     m = measure_local_backend()
+    if num_devices > 1:
+        coll_bw = measure_collective_bandwidth(num_devices)
+        hop = measure_collective_hop_latency(num_devices, bandwidth=coll_bw)
+    else:
+        coll_bw, hop = 8e9, CollectiveModel.HOP_LATENCY
     hw = HardwareSpec(
         name="local-cpu",
         peak_flops=m["matmul_flops_per_s"],
         hbm_bandwidth=m["elementwise_bytes_per_s"],
-        ici_bandwidth=measure_collective_bandwidth(num_devices)
-        if num_devices > 1 else 8e9,
+        ici_bandwidth=coll_bw,
         dcn_bandwidth=8e9,
         op_overhead=m["op_overhead_s"] * 0.25,
         host_dispatch=m["op_overhead_s"],
     )
     topo = MeshTopology({"data": num_devices}, {"data": "ici"})
-    return CostModel(hw=hw, topo=topo)
+    return CostModel(hw=hw, topo=topo, hop_latency=hop)

@@ -9,7 +9,7 @@ dPRO (arXiv:2205.02473) showed the fix: build a *global* graph whose nodes
 are every worker's tasks and whose cross-worker edges encode collective
 synchronization, then simulate it once.
 
-:class:`ClusterGraph` does exactly that:
+:class:`ClusterGraph` does exactly that, from either of two sources:
 
 * :meth:`ClusterGraph.build` replicates a profiled single-worker
   :class:`~repro.core.graph.DependencyGraph` across N (possibly
@@ -17,6 +17,17 @@ synchronization, then simulate it once.
   namespaced ``w<i>/<thread>`` (:func:`~repro.core.task.worker_thread`);
   non-collective durations and gaps scale by ``compute_scale`` (stragglers,
   mixed device generations).
+
+* :meth:`ClusterGraph.from_worker_graphs` builds the same global graph from
+  N *different* per-worker graphs — the asymmetric general case the
+  replicate path is a special case of.  Collectives are matched across
+  workers by (name, occurrence) — :func:`match_collective_groups` — and each
+  matched group is wired with the same mode-selected cross-worker structure.
+  :meth:`ClusterGraph.from_traces` feeds it from real per-worker profiler
+  traces via :mod:`repro.traceio` (Chrome trace-event JSON / native JSONL,
+  dPRO-style clock alignment).  P3-style unnamed push/pull pairs are only
+  synchronized on the replicate path (they need the base graph's structure
+  to pair pushes with pulls).
 
 * Collectives become cross-worker structures, mode-selectable:
 
@@ -31,10 +42,14 @@ synchronization, then simulate it once.
 
   - ``"hierarchical"`` (BlueConnect-style): intra-pod reduce-scatter, a
     cross-pod all-reduce among pod leaders over DCN, intra-pod all-gather —
-    the decomposition of ``CollectiveModel.hierarchical_all_reduce``.
+    the decomposition of ``CollectiveModel.hierarchical_all_reduce``.  The
+    cross-pod stage exchanges one equal shard per pod, so the pod layout
+    must have equal-size pods; :meth:`build` rejects inconsistent layouts
+    instead of producing a silently mis-grouped graph.
 
   - ``"fused"``: one synchronized task per worker keeping the analytical
-    duration (a zero-cost barrier provides the "wait for all" semantics).
+    (or traced) duration (a zero-cost barrier provides the "wait for all"
+    semantics).
 
   Point-to-point push/pull pairs (P3, parameter server) are synchronized at
   the aggregation boundary: every worker's push feeds a barrier that gates
@@ -50,7 +65,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 from .costmodel import CollectiveModel, CostModel
 from .graph import DependencyGraph, GraphError
@@ -63,6 +79,10 @@ from .task import (Task, TaskKind, HOST_THREAD, split_worker_thread,
 _RING_ROUNDS = {"all-reduce": 2, "reduce-scatter": 1, "all-gather": 1}
 
 _SYNC_THREAD = "cluster/sync"
+
+# Worker-local thread carrying the trace-import start skew (a zero-duration
+# task whose gap models the worker joining the step late).
+_SKEW_THREAD = "trace/skew"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +111,77 @@ def _as_specs(workers: Union[int, Sequence[WorkerSpec]]) -> List[WorkerSpec]:
     if not specs:
         raise GraphError("cluster needs >= 1 worker")
     return specs
+
+
+def _validate_hierarchical_pods(specs: Sequence[WorkerSpec]) -> None:
+    """Reject pod layouts the hierarchical decomposition cannot express.
+
+    The cross-pod stage all-reduces one equal shard per pod (each pod's
+    reduce-scatter leaves ``payload / pod_size`` on its leader), so pods of
+    different sizes would exchange mismatched shards — a silently
+    mis-grouped graph.  Fail loudly instead.
+    """
+    sizes: Dict[int, int] = collections.Counter(s.pod for s in specs)
+    if len(set(sizes.values())) > 1:
+        raise GraphError(
+            "hierarchical collective mode needs equal-size pods (the "
+            "cross-pod all-reduce exchanges one equal shard per pod); got "
+            f"pod sizes {dict(sorted(sizes.items()))} — fix the WorkerSpec "
+            "pod layout or use collective_mode='ring'")
+
+
+def match_collective_groups(graphs: Sequence[DependencyGraph]
+                            ) -> List[Tuple[str, List[Task]]]:
+    """Match named collectives across per-worker graphs.
+
+    Workers of a data-parallel job run the same program, so the k-th
+    occurrence of collective name X on each worker is the same logical
+    collective (dPRO matches traced collectives the same way).  Tasks count
+    as collectives when ``kind == COLLECTIVE`` and ``attrs["collective"]``
+    names the op.  Scans lanes in sorted-thread order so the occurrence
+    index is deterministic for any graph construction order.
+
+    Returns ``[(op, [worker0_task, worker1_task, ...]), ...]`` in worker-0
+    scan order.  Raises :class:`~repro.core.graph.GraphError` when any
+    worker is missing a collective the others have (or has extras) — a
+    mismatched trace set cannot be synchronized.
+    """
+    per_worker: List[Dict[Tuple[str, int], Task]] = []
+    orders: List[List[Tuple[str, int]]] = []
+    for wg in graphs:
+        seen: Dict[str, int] = collections.defaultdict(int)
+        keyed: Dict[Tuple[str, int], Task] = {}
+        order: List[Tuple[str, int]] = []
+        for thread in sorted(wg.lanes):
+            for uid in wg.lanes[thread]:
+                t = wg.get(uid)
+                if t.kind == TaskKind.COLLECTIVE and t.attrs.get("collective"):
+                    key = (t.name, seen[t.name])
+                    seen[t.name] += 1
+                    keyed[key] = t
+                    order.append(key)
+        per_worker.append(keyed)
+        orders.append(order)
+    union = set().union(*(set(k) for k in per_worker)) if per_worker else set()
+    for i, keyed in enumerate(per_worker):
+        missing = union - set(keyed)
+        if missing:
+            names = sorted(f"{n}#{k}" for n, k in missing)[:5]
+            raise GraphError(
+                f"worker {i} trace is missing collective(s) present on "
+                f"other workers: {', '.join(names)}"
+                f"{' ...' if len(missing) > 5 else ''} — cannot match "
+                f"collectives across an inconsistent trace set")
+    groups: List[Tuple[str, List[Task]]] = []
+    for key in orders[0]:
+        members = [keyed[key] for keyed in per_worker]
+        ops = {m.attrs["collective"] for m in members}
+        if len(ops) > 1:
+            raise GraphError(
+                f"collective {key[0]!r}#{key[1]} has conflicting ops across "
+                f"workers: {sorted(ops)}")
+        groups.append((ops.pop(), members))
+    return groups
 
 
 @dataclasses.dataclass
@@ -129,7 +220,7 @@ class ClusterResult:
 
 
 class ClusterGraph:
-    """A global N-worker dependency graph built from a single-worker profile."""
+    """A global N-worker dependency graph built from per-worker profiles."""
 
     def __init__(self, graph: DependencyGraph, workers: List[WorkerSpec],
                  cost: CostModel, schedule: Optional[ScheduleFn] = None,
@@ -139,10 +230,14 @@ class ClusterGraph:
         self.cost = cost
         self.schedule = schedule
         self.collective_mode = collective_mode
-        # provenance records for :meth:`retune` — (kind, task, worker,
-        # *base values); tasks later detached from the graph are skipped.
+        # provenance records for :meth:`retune` — (kind, task, *base values);
+        # tasks later detached from the graph are skipped.
         self._prov: List[Tuple] = []
         self._tasks_by_worker: Optional[Dict[int, List[Task]]] = None
+        # monotone id shared by all pieces (legs/stages) of one wired
+        # collective (attrs["coll_gid"]) — the trace exporter collapses
+        # pieces back into one per-worker collective event by this id.
+        self._gid = 0
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -157,48 +252,160 @@ class ClusterGraph:
         inserted by :func:`repro.core.whatif.what_if_distributed` /
         ``what_if_zero``) carry ``attrs["collective"]``; each such task is
         replaced, per replica, by the cross-worker structure selected by
-        ``collective_mode`` ("ring" | "hierarchical" | "fused").
+        ``collective_mode`` ("ring" | "hierarchical" | "fused").  This is
+        the symmetric special case of :meth:`from_worker_graphs` — every
+        worker runs the same profile — plus parameter-server push/pull
+        synchronization, which needs the shared base structure.
         """
-        if collective_mode not in ("ring", "hierarchical", "fused"):
-            raise GraphError(f"unknown collective_mode {collective_mode!r}")
         specs = _as_specs(workers)
+        cls._check_mode(collective_mode, specs)
         cost = cost or CostModel()
         n = len(specs)
         g = DependencyGraph()
-        base_tasks = base.tasks()
+        cg = cls(g, specs, cost, schedule, collective_mode)
 
         # 1. replicate: clone every task per worker, scale compute durations.
-        cg = cls(g, specs, cost, schedule, collective_mode)
-        replicas: List[Dict[int, Task]] = []
-        for i, spec in enumerate(specs):
-            remap: Dict[int, Task] = {}
-            for thread, lane in base.lanes.items():
-                for uid in lane:
-                    t = base.get(uid)
-                    nt = t.clone()
-                    nt.thread = worker_thread(i, t.thread)
-                    if t.kind == TaskKind.COLLECTIVE:
-                        nt.duration = t.duration / max(spec.bandwidth_scale,
-                                                       1e-12)
-                        cg._prov.append(("coll", nt, i, t.duration))
-                    else:
-                        nt.duration = t.duration * spec.compute_scale
-                        nt.gap = t.gap * spec.compute_scale
-                        cg._prov.append(("compute", nt, i, t.duration, t.gap))
-                    g.add_task(nt, link_lane=False)
-                    remap[uid] = nt
-            for t in base_tasks:
-                for c in base.children(t):
-                    g.add_edge(remap[t.uid], remap[c.uid])
-            replicas.append(remap)
+        replicas = [cg._clone_worker(i, spec, base)
+                    for i, spec in enumerate(specs)]
         if n > 1:
-            cg._link_collectives(base, replicas, collective_mode)
+            # 2. wire each base collective's replica group cross-worker.
+            for c in base.tasks():
+                if c.kind == TaskKind.COLLECTIVE and c.attrs.get("collective"):
+                    members = [remap[c.uid] for remap in replicas]
+                    cg._wire_group(c.attrs["collective"], members,
+                                   collective_mode)
             cg._link_push_pull(base, replicas)
-        g.validate()
+        return cg._finish()
+
+    @classmethod
+    def from_worker_graphs(cls, graphs: Sequence[DependencyGraph],
+                           workers: Optional[Union[int, Sequence[WorkerSpec]]]
+                           = None,
+                           *, cost: Optional[CostModel] = None,
+                           collective_mode: str = "ring",
+                           schedule: Optional[ScheduleFn] = None,
+                           start_skews: Optional[Sequence[float]] = None
+                           ) -> "ClusterGraph":
+        """Build an asymmetric global graph from N *different* worker graphs.
+
+        This is the trace-import path (dPRO §4, Daydream §4.1 applied per
+        worker): each graph comes from one worker's own profile, so
+        durations, gaps, and even task sets may differ.  Collectives are
+        matched across workers by (name, occurrence)
+        (:func:`match_collective_groups`) and wired with the mode-selected
+        cross-worker structure; everything else stays worker-local.
+
+        ``workers`` defaults to uniform specs (the traces already encode
+        each worker's real speed); pass explicit :class:`WorkerSpec` lists
+        to layer what-if scaling *on top of* the traced durations.
+        ``start_skews`` (seconds per worker, from clock alignment) models
+        workers that started the step late: a zero-duration task with that
+        gap gates each worker's roots.
+
+        With N references to one identical graph this reduces to
+        :meth:`build` (minus push/pull pairing) — the property tests hold
+        the two paths equal to float precision.
+        """
+        graphs = list(graphs)
+        if not graphs:
+            raise GraphError("from_worker_graphs needs >= 1 worker graph")
+        specs = [WorkerSpec() for _ in graphs] if workers is None \
+            else _as_specs(workers)
+        if len(specs) != len(graphs):
+            raise GraphError(
+                f"{len(graphs)} worker graph(s) but {len(specs)} worker "
+                f"spec(s); they must pair up 1:1")
+        cls._check_mode(collective_mode, specs)
+        cost = cost or CostModel()
+        g = DependencyGraph()
+        cg = cls(g, specs, cost, schedule, collective_mode)
+        remaps = [cg._clone_worker(i, spec, wg)
+                  for i, (wg, spec) in enumerate(zip(graphs, specs))]
+        if start_skews:
+            for i, skew in enumerate(start_skews):
+                if skew > 0:
+                    cg._add_start_skew(i, skew, remaps[i], graphs[i])
+        if len(graphs) > 1:
+            for op, members in match_collective_groups(graphs):
+                cg._wire_group(op, [remaps[i][m.uid]
+                                    for i, m in enumerate(members)],
+                               collective_mode)
+        return cg._finish()
+
+    @classmethod
+    def from_traces(cls, traces: Any,
+                    workers: Optional[Union[int, Sequence[WorkerSpec]]] = None,
+                    *, cost: Optional[CostModel] = None,
+                    collective_mode: str = "ring",
+                    schedule: Optional[ScheduleFn] = None,
+                    align: bool = True) -> "ClusterGraph":
+        """Import per-worker profiler traces into one global cluster graph.
+
+        ``traces`` is a trace directory (one Chrome trace-event JSON or
+        native JSONL file per worker — see :mod:`repro.traceio` for the
+        format contract) or an already-loaded
+        :class:`repro.traceio.ImportedCluster`.  Traces are clock-aligned
+        (dPRO-style: least-squares offset+drift per worker anchored on
+        matched collective ends) unless ``align=False``, then routed through
+        :meth:`from_worker_graphs`.
+        """
+        from repro.traceio import ImportedCluster, load_trace_dir
+        imp = traces if isinstance(traces, ImportedCluster) \
+            else load_trace_dir(str(traces), align=align)
+        return cls.from_worker_graphs(
+            imp.graphs, workers, cost=cost, collective_mode=collective_mode,
+            schedule=schedule, start_skews=imp.start_skews)
+
+    # ----------------------------------------------------------- build pieces
+    @staticmethod
+    def _check_mode(mode: str, specs: Sequence[WorkerSpec]) -> None:
+        if mode not in ("ring", "hierarchical", "fused"):
+            raise GraphError(f"unknown collective_mode {mode!r}")
+        if mode == "hierarchical":
+            _validate_hierarchical_pods(specs)
+
+    def _clone_worker(self, i: int, spec: WorkerSpec,
+                      src: DependencyGraph) -> Dict[int, Task]:
+        """Clone ``src`` into the global graph as worker ``i``'s subgraph."""
+        g = self.graph
+        remap: Dict[int, Task] = {}
+        for thread, lane in src.lanes.items():
+            for uid in lane:
+                t = src.get(uid)
+                nt = t.clone()
+                nt.thread = worker_thread(i, t.thread)
+                if t.kind == TaskKind.COLLECTIVE:
+                    nt.duration = t.duration / max(spec.bandwidth_scale,
+                                                   1e-12)
+                    self._prov.append(("coll", nt, i, t.duration))
+                else:
+                    nt.duration = t.duration * spec.compute_scale
+                    nt.gap = t.gap * spec.compute_scale
+                    self._prov.append(("compute", nt, i, t.duration, t.gap))
+                g.add_task(nt, link_lane=False)
+                remap[uid] = nt
+        for t in src.tasks():
+            for c in src.children(t):
+                g.add_edge(remap[t.uid], remap[c.uid])
+        return remap
+
+    def _add_start_skew(self, i: int, skew: float, remap: Dict[int, Task],
+                        src: DependencyGraph) -> None:
+        """Gate worker ``i``'s roots behind its trace-aligned start skew."""
+        sk = self.graph.add_task(
+            Task(name=f"w{i}:start-skew", kind=TaskKind.SYNC,
+                 thread=worker_thread(i, _SKEW_THREAD), duration=0.0,
+                 gap=skew, phase="comm"), link_lane=False)
+        for t in src.tasks():
+            if not src.parents(t):
+                self.graph.add_edge(sk, remap[t.uid])
+
+    def _finish(self) -> "ClusterGraph":
+        self.graph.validate()
         # collective wiring detached some replica tasks: prune their records
         # once so retune() does no per-call membership checks
-        cg._prov = [r for r in cg._prov if r[1] in g]
-        return cg
+        self._prov = [r for r in self._prov if r[1] in self.graph]
+        return self
 
     # ------------------------------------------------------- collective wiring
     def _link_bandwidth(self, i: int, j: int) -> float:
@@ -218,7 +425,7 @@ class ClusterGraph:
         a retuned sweep point is bit-identical to a fresh build."""
         n = len(self.workers)
         return ((payload / n) / self._link_bandwidth(i, (i + 1) % n)
-                + CollectiveModel.HOP_LATENCY)
+                + self.cost.collectives.hop_latency)
 
     def _detach(self, task: Task) -> Tuple[List[Task], List[Task]]:
         """Remove ``task`` keeping (parents, children) for re-wiring."""
@@ -232,46 +439,45 @@ class ClusterGraph:
             Task(name=name, kind=TaskKind.SYNC, thread=_SYNC_THREAD,
                  duration=0.0, phase="comm"), link_lane=False)
 
-    def _link_collectives(self, base: DependencyGraph,
-                          replicas: List[Dict[int, Task]], mode: str) -> None:
-        linkable = [t for t in base.tasks()
-                    if t.kind == TaskKind.COLLECTIVE
-                    and t.attrs.get("collective")]
-        for c in linkable:
-            op = c.attrs.get("collective")
-            if mode == "hierarchical" and op == "all-reduce":
-                # BlueConnect decomposition is an all-reduce rewrite; a bare
-                # reduce-scatter / all-gather is already single-stage and
-                # keeps its ring legs
-                self._hierarchical_decompose(c, replicas)
-            elif mode in ("ring", "hierarchical") and op in _RING_ROUNDS:
-                self._ring_decompose(c, replicas)
-            else:
-                self._fused_sync(c, replicas)
+    @staticmethod
+    def _group_payload(members: Sequence[Task]) -> float:
+        return max(max(m.comm_bytes for m in members), 0.0)
 
-    def _ring_decompose(self, c: Task, replicas: List[Dict[int, Task]]) -> None:
+    def _wire_group(self, op: str, members: List[Task], mode: str) -> None:
+        """Wire one matched collective (``members[i]`` = worker i's task)."""
+        self._gid += 1
+        if mode == "hierarchical" and op == "all-reduce":
+            # BlueConnect decomposition is an all-reduce rewrite; a bare
+            # reduce-scatter / all-gather is already single-stage and
+            # keeps its ring legs
+            self._hierarchical_decompose(members)
+        elif mode in ("ring", "hierarchical") and op in _RING_ROUNDS:
+            self._ring_decompose(op, members)
+        else:
+            self._fused_sync(members)
+
+    def _ring_decompose(self, op: str, members: List[Task]) -> None:
         """Per-worker ring legs with cross-worker pipeline edges.
 
         Leg round k of worker i waits on round k-1 of worker i-1 (the chunk it
         is about to forward) and on its own round k-1 (channel serialization).
         Per-worker totals telescope to ``group_time`` for uniform workers.
         """
-        n = len(replicas)
-        rounds = _RING_ROUNDS[c.attrs["collective"]] * (n - 1)
-        payload = max(c.comm_bytes, 0.0)
+        n = len(members)
+        rounds = _RING_ROUNDS[op] * (n - 1)
+        payload = self._group_payload(members)
         legs: List[List[Task]] = []
-        for i, remap in enumerate(replicas):
-            rc = remap[c.uid]
+        for i, rc in enumerate(members):
             parents, children = self._detach(rc)
             leg_dur = self._leg_duration(i, payload)
             worker_legs: List[Task] = []
             prev: Optional[Task] = None
             for k in range(rounds):
                 leg = rc.clone()
-                leg.name = f"{c.name}:leg{k}"
+                leg.name = f"{rc.name}:leg{k}"
                 leg.duration = leg_dur
                 leg.comm_bytes = payload / n
-                leg.attrs = dict(c.attrs, ring_round=k)
+                leg.attrs = dict(rc.attrs, ring_round=k, coll_gid=self._gid)
                 self._prov.append(("ring", leg, i, payload))
                 self.graph.add_task(leg, link_lane=False)
                 for p in (parents if prev is None else [prev]):
@@ -285,8 +491,7 @@ class ClusterGraph:
             for k in range(1, rounds):
                 self.graph.add_edge(legs[(i - 1) % n][k - 1], legs[i][k])
 
-    def _hierarchical_decompose(self, c: Task,
-                                replicas: List[Dict[int, Task]]) -> None:
+    def _hierarchical_decompose(self, members: List[Task]) -> None:
         """BlueConnect-style: pod-local reduce-scatter, cross-pod all-reduce
         among pod leaders over DCN, pod-local all-gather.
 
@@ -295,85 +500,90 @@ class ClusterGraph:
         is gated on every leader's cross-pod leg.  Total per-worker time for
         uniform pods equals ``CollectiveModel.hierarchical_all_reduce``.
         """
-        coll = CollectiveModel(self.cost.hw, self.cost.topo)
-        payload = max(c.comm_bytes, 0.0)
+        coll = self.cost.collectives
+        payload = self._group_payload(members)
+        cname = members[0].name
         pods: Dict[int, List[int]] = collections.defaultdict(list)
         for i, w in enumerate(self.workers):
             pods[w.pod].append(i)
         pod_ids = sorted(pods)
         num_pods = len(pod_ids)
 
-        bounds = [self._detach(remap[c.uid]) for remap in replicas]
+        bounds = [self._detach(m) for m in members]
 
-        leaders_bar = self._barrier(f"{c.name}:leaders-barrier")
-        rs_of_pod: Dict[int, List[Task]] = {}
+        leaders_bar = self._barrier(f"{cname}:leaders-barrier")
         for p in pod_ids:
-            members = pods[p]
-            m = len(members)
-            scale = min(self.workers[i].bandwidth_scale for i in members)
+            pod_members = tuple(pods[p])
+            m = len(pod_members)
+            scale = min(self.workers[i].bandwidth_scale for i in pod_members)
             rs_dur = coll.axis_time("reduce-scatter", payload, m, "ici")
             rs_dur /= max(scale, 1e-12)
-            bar = self._barrier(f"{c.name}:pod{p}:rs-barrier")
+            bar = self._barrier(f"{cname}:pod{p}:rs-barrier")
             rs_tasks = []
-            for i in members:
+            for i in pod_members:
                 parents, _ = bounds[i]
                 for par in parents:
                     self.graph.add_edge(par, bar)
-                rs = self._add_comm(i, c, f"pod{p}:reduce-scatter", rs_dur,
-                                    payload)
+                rs = self._add_comm(i, members[i], f"pod{p}:reduce-scatter",
+                                    rs_dur, payload)
+                self._prov.append(("hrs", rs, pod_members, payload))
                 self.graph.add_edge(bar, rs)
                 rs_tasks.append(rs)
-            rs_of_pod[p] = rs_tasks
             for rs in rs_tasks:
                 self.graph.add_edge(rs, leaders_bar)
 
         if num_pods > 1:
-            gather_bar = self._barrier(f"{c.name}:gather-barrier")
+            gather_bar = self._barrier(f"{cname}:gather-barrier")
             for p in pod_ids:
-                members = pods[p]
-                leader = members[0]
-                shard = payload / max(len(members), 1)
+                pod_members = pods[p]
+                leader = pod_members[0]
+                shard = payload / max(len(pod_members), 1)
                 cross_dur = coll.axis_time("all-reduce", shard, num_pods,
                                            "dcn")
                 cross_dur /= max(self.workers[leader].bandwidth_scale, 1e-12)
-                cross = self._add_comm(leader, c, f"pod{p}:cross-all-reduce",
+                cross = self._add_comm(leader, members[leader],
+                                       f"pod{p}:cross-all-reduce",
                                        cross_dur, shard)
+                self._prov.append(("hcross", cross, leader, shard, num_pods))
                 self.graph.add_edge(leaders_bar, cross)
                 self.graph.add_edge(cross, gather_bar)
             gate = gather_bar
         else:
             gate = leaders_bar
         for p in pod_ids:
-            self._pod_all_gather(c, coll, payload, p, pods[p], gate, bounds)
+            self._pod_all_gather(members, coll, payload, p, pods[p], gate,
+                                 bounds)
 
-    def _pod_all_gather(self, c: Task, coll: CollectiveModel, payload: float,
-                        p: int, members: List[int], gate: Task,
-                        bounds) -> None:
-        m = len(members)
-        scale = min(self.workers[i].bandwidth_scale for i in members)
+    def _pod_all_gather(self, members: List[Task], coll: CollectiveModel,
+                        payload: float, p: int, pod_members: List[int],
+                        gate: Task, bounds) -> None:
+        m = len(pod_members)
+        scale = min(self.workers[i].bandwidth_scale for i in pod_members)
         ag_dur = coll.axis_time("all-gather", payload, m, "ici")
         ag_dur /= max(scale, 1e-12)
-        for i in members:
-            ag = self._add_comm(i, c, f"pod{p}:all-gather", ag_dur, payload)
+        for i in pod_members:
+            ag = self._add_comm(i, members[i], f"pod{p}:all-gather", ag_dur,
+                                payload)
+            self._prov.append(("hag", ag, tuple(pod_members), payload))
             self.graph.add_edge(gate, ag)
             _, children = bounds[i]
             for ch in children:
                 self.graph.add_edge(ag, ch)
 
-    def _add_comm(self, i: int, c: Task, label: str, dur: float,
+    def _add_comm(self, i: int, proto: Task, label: str, dur: float,
                   nbytes: float) -> Task:
-        t = Task(name=f"{c.name}:{label}", kind=TaskKind.COLLECTIVE,
-                 thread=worker_thread(i, split_worker_thread(c.thread)[1]),
+        t = Task(name=f"{proto.name}:{label}", kind=TaskKind.COLLECTIVE,
+                 thread=worker_thread(i, split_worker_thread(proto.thread)[1]),
                  duration=dur, comm_bytes=nbytes, phase="comm",
-                 attrs=dict(c.attrs, stage=label))
+                 attrs=dict(proto.attrs, stage=label, coll_gid=self._gid))
         return self.graph.add_task(t, link_lane=False)
 
-    def _fused_sync(self, c: Task, replicas: List[Dict[int, Task]]) -> None:
-        """Keep one analytical-duration task per worker, gated by a barrier so
-        no worker's collective starts before every worker is ready."""
-        bar = self._barrier(f"{c.name}:barrier")
-        for remap in replicas:
-            rc = remap[c.uid]
+    def _fused_sync(self, members: List[Task]) -> None:
+        """Keep one analytical/traced-duration task per worker, gated by a
+        barrier so no worker's collective starts before every worker is
+        ready."""
+        bar = self._barrier(f"{members[0].name}:barrier")
+        for rc in members:
             for p in self.graph.parents(rc):
                 self.graph.add_edge(p, bar)
             self.graph.add_edge(bar, rc)
@@ -406,11 +616,26 @@ class ClusterGraph:
     def retunable(self) -> bool:
         """Whether :meth:`retune` can re-parameterize this build in place.
 
-        Ring and fused collective wiring is duration-only under a worker
-        spec change; the hierarchical (BlueConnect) decomposition's stage
-        *structure* depends on the pod layout, so it needs a rebuild.
+        Every collective mode records enough provenance for a duration-only
+        retune (ring legs and fused durations always; hierarchical stage
+        durations are recomputable from the recorded pod membership).  A
+        *pod-layout* change is still structural for hierarchical graphs —
+        use :meth:`can_retune` to check a concrete target spec.
         """
-        return self.collective_mode != "hierarchical"
+        return True
+
+    def can_retune(self, workers: Union[int, Sequence[WorkerSpec]]) -> bool:
+        """True when :meth:`retune` accepts ``workers`` for this build:
+        same worker count, and (hierarchical mode) the same pod layout."""
+        try:
+            specs = _as_specs(workers)
+        except GraphError:
+            return False
+        if len(specs) != len(self.workers):
+            return False
+        if self.collective_mode == "hierarchical":
+            return [s.pod for s in specs] == [w.pod for w in self.workers]
+        return True
 
     def retune(self, workers: Union[int, Sequence[WorkerSpec]]
                ) -> "ClusterGraph":
@@ -418,23 +643,28 @@ class ClusterGraph:
 
         Recomputes every scaled duration (compute/gap by ``compute_scale``,
         replica collectives by ``bandwidth_scale``, ring legs from the link
-        bandwidths) from the recorded base values — the same expressions
+        bandwidths, hierarchical stage durations from the recorded pod
+        membership) from the recorded base values — the same expressions
         :meth:`build` used, so the result is bit-identical to a fresh build
         with ``workers``.  This is what lets :meth:`Scenario.sweep
         <repro.core.optimize.Scenario.sweep>` evaluate bandwidth/straggler
         grids without re-replicating and re-wiring the global graph per
-        point.
+        point.  Hierarchical graphs additionally require the pod layout to
+        stay fixed (stage *structure* depends on it); changing pods raises.
         """
         specs = _as_specs(workers)
         if len(specs) != len(self.workers):
             raise GraphError(
                 f"retune needs the same worker count (have "
                 f"{len(self.workers)}, got {len(specs)}); rebuild instead")
-        if not self.retunable:
+        if self.collective_mode == "hierarchical" and \
+                [s.pod for s in specs] != [w.pod for w in self.workers]:
             raise GraphError(
-                "hierarchical cluster graphs cannot be retuned (stage "
-                "structure depends on the pod layout); rebuild instead")
+                "changing the pod layout is structural for hierarchical "
+                "cluster graphs (stage membership depends on it); rebuild "
+                "instead")
         self.workers = specs
+        coll = self.cost.collectives
         leg_dur: Dict[Tuple[int, float], float] = {}   # (worker, payload)
         for rec in self._prov:
             kind, t = rec[0], rec[1]
@@ -445,13 +675,24 @@ class ClusterGraph:
             elif kind == "coll":
                 _, _, i, dur = rec
                 t.duration = dur / max(specs[i].bandwidth_scale, 1e-12)
-            else:                   # ring leg
+            elif kind == "ring":
                 _, _, i, payload = rec
                 key = (i, payload)
                 d = leg_dur.get(key)
                 if d is None:
                     d = leg_dur[key] = self._leg_duration(i, payload)
                 t.duration = d
+            elif kind in ("hrs", "hag"):
+                _, _, pod_members, payload = rec
+                op = "reduce-scatter" if kind == "hrs" else "all-gather"
+                scale = min(specs[i].bandwidth_scale for i in pod_members)
+                t.duration = coll.axis_time(op, payload, len(pod_members),
+                                            "ici") / max(scale, 1e-12)
+            else:                   # hcross
+                _, _, leader, shard, num_pods = rec
+                t.duration = coll.axis_time("all-reduce", shard, num_pods,
+                                            "dcn") \
+                    / max(specs[leader].bandwidth_scale, 1e-12)
         return self
 
     # -------------------------------------------------------------- simulate

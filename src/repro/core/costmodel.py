@@ -69,12 +69,21 @@ class CollectiveModel:
     running the formula per mesh axis (DESIGN.md §2).
     """
 
-    HOP_LATENCY = 1e-6  # seconds per ring step (link + switch latency)
+    # Default seconds per ring step (link + switch latency).  Kept as a class
+    # constant for the analytical TPU model; pass ``hop_latency`` (or set
+    # ``CostModel.hop_latency``) to use a *measured* value — calibration
+    # (:func:`repro.core.calibrate.calibrated_cost_model`) derives it from
+    # tiny-payload collectives the same way compute durations are calibrated
+    # from measured FLOP rates.
+    HOP_LATENCY = 1e-6
 
     def __init__(self, hw: HardwareSpec = TPU_V5E,
-                 topo: Optional[MeshTopology] = None) -> None:
+                 topo: Optional[MeshTopology] = None,
+                 hop_latency: Optional[float] = None) -> None:
         self.hw = hw
         self.topo = topo or MeshTopology.single_pod()
+        self.hop_latency = (self.HOP_LATENCY if hop_latency is None
+                            else hop_latency)
 
     def _axis_bw(self, kind: str) -> float:
         if kind == "dcn":
@@ -89,11 +98,11 @@ class CollectiveModel:
         frac = (axis_size - 1) / axis_size
         steps = axis_size - 1
         if op == "all-reduce":
-            return 2 * frac * payload_bytes / bw + 2 * steps * self.HOP_LATENCY
+            return 2 * frac * payload_bytes / bw + 2 * steps * self.hop_latency
         if op in ("reduce-scatter", "all-gather", "all-to-all"):
-            return frac * payload_bytes / bw + steps * self.HOP_LATENCY
+            return frac * payload_bytes / bw + steps * self.hop_latency
         if op == "collective-permute":
-            return payload_bytes / bw + self.HOP_LATENCY
+            return payload_bytes / bw + self.hop_latency
         raise ValueError(f"unknown collective {op!r}")
 
     def group_time(self, op: str, payload_bytes: float, group_size: int,
@@ -135,9 +144,13 @@ class CostModel:
     compute_scale: float = 1.0
     memory_scale: float = 1.0
     collective_scale: float = 1.0
+    # Per-ring-step latency override (None = CollectiveModel.HOP_LATENCY);
+    # calibrate.py measures it from tiny-payload local collectives.
+    hop_latency: Optional[float] = None
 
     def __post_init__(self) -> None:
-        self.collectives = CollectiveModel(self.hw, self.topo)
+        self.collectives = CollectiveModel(self.hw, self.topo,
+                                           hop_latency=self.hop_latency)
 
     # ------------------------------------------------------------- durations
     def compute_time(self, flops: float, bytes_accessed: float) -> float:

@@ -50,7 +50,14 @@ Paper-algorithm -> registered-name map (Algorithms 3-12, §5 + Appendix A):
     beyond  straggler                ``straggler``
     beyond  bandwidth scaling        ``bandwidth``
     beyond  gradient accumulation    ``grad_accum``
+    beyond  identity / baseline      ``noop``
     ======  =======================  ===============================
+
+Scenarios built from *real traces* (``Scenario(trace_dir=...)`` — see
+:mod:`repro.traceio`) run every registered optimization on the imported
+per-worker graphs: the stack transforms each worker's graph and the
+prediction comes from the asymmetric global
+:meth:`ClusterGraph.from_worker_graphs` build.
 
 The legacy ``repro.core.whatif.what_if_*`` / ``cluster_what_if_*`` functions
 are thin wrappers over these registered optimizations.
@@ -132,14 +139,26 @@ class Scenario:
     single-graph route; a sequence of :class:`WorkerSpec` routes through the
     global :class:`ClusterGraph` (per-worker breakdown, heterogeneous
     clusters, ``collective_mode`` selectable).
+
+    ``trace_dir`` (or a pre-loaded ``traces``
+    :class:`repro.traceio.ImportedCluster`) takes the *trace route*: N
+    per-worker profiler traces (Chrome trace-event JSON / native JSONL) are
+    clock-aligned and imported as per-worker graphs, every optimization in
+    the stack is applied to each worker's graph, and the prediction comes
+    from the asymmetric global graph
+    (:meth:`ClusterGraph.from_worker_graphs`).  ``workers`` then defaults to
+    uniform specs matching the trace count — the traces already encode real
+    per-worker speeds — and explicit specs layer what-if scaling on top.
     """
 
-    graph: DependencyGraph
+    graph: Optional[DependencyGraph] = None
     cost: Optional[CostModel] = None
     layer_grad_bytes: Optional[Dict[str, float]] = None
     activation_bytes: Optional[Dict[str, float]] = None
     workers: Union[int, Sequence[WorkerSpec]] = 1
     collective_mode: str = "ring"
+    trace_dir: Optional[str] = None
+    traces: Optional[Any] = None       # repro.traceio.ImportedCluster
 
     _baseline: Optional[SimResult] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
@@ -147,11 +166,32 @@ class Scenario:
     def __post_init__(self) -> None:
         if self.cost is None:
             self.cost = CostModel()
+        if self.trace_dir is not None and self.traces is None:
+            from repro.traceio import load_trace_dir
+            self.traces = load_trace_dir(self.trace_dir)
+        if self.traces is not None:
+            n = len(self.traces.graphs)
+            if isinstance(self.workers, int):
+                if self.workers not in (1, n):
+                    raise OptimizationError(
+                        f"scenario has {n} trace worker(s) but workers="
+                        f"{self.workers}; leave workers unset or pass one "
+                        f"WorkerSpec per trace")
+                self.workers = [WorkerSpec() for _ in range(n)]
+            elif len(list(self.workers)) != n:
+                raise OptimizationError(
+                    f"scenario has {n} trace worker(s) but "
+                    f"{len(list(self.workers))} WorkerSpec(s)")
+            if self.graph is None:
+                self.graph = self.traces.graphs[0]
+        if self.graph is None:
+            raise OptimizationError(
+                "Scenario needs a baseline graph or trace_dir/traces")
 
     # ------------------------------------------------------------ routing
     @property
     def is_cluster(self) -> bool:
-        return not isinstance(self.workers, int)
+        return self.traces is not None or not isinstance(self.workers, int)
 
     @property
     def specs(self) -> List[WorkerSpec]:
@@ -184,10 +224,26 @@ class Scenario:
         return GraphTransform(self.graph)
 
     def baseline(self) -> SimResult:
-        """Simulated baseline (single-worker profile), cached."""
+        """Simulated baseline, cached.
+
+        Single-graph and replicate-cluster routes simulate the one baseline
+        graph; the trace route simulates the imported (untransformed)
+        cluster — the traces *are* the distributed baseline.
+        """
         if self._baseline is None:
-            self._baseline = simulate(self.graph)
+            if self.traces is not None:
+                self._baseline = self._trace_cluster(
+                    self.traces.graphs).simulate().global_result
+            else:
+                self._baseline = simulate(self.graph)
         return self._baseline
+
+    def _trace_cluster(self, graphs: Sequence[DependencyGraph],
+                       schedule: Any = None) -> ClusterGraph:
+        return ClusterGraph.from_worker_graphs(
+            graphs, self.specs, cost=self.cost,
+            collective_mode=self.collective_mode, schedule=schedule,
+            start_skews=self.traces.start_skews)
 
     # ----------------------------------------------------------- evaluate
     def predict(self, opt: Union[str, "Optimization"],
@@ -197,12 +253,36 @@ class Scenario:
         pred, _, _ = self._evaluate(_resolve(opt, params))
         return pred
 
+    def evaluate(self, opt: Union[str, "Optimization"], **params: Any
+                 ) -> Tuple["Prediction", GraphTransform,
+                            Optional[ClusterGraph]]:
+        """:meth:`predict` plus the applied transform and (cluster routes)
+        the built :class:`ClusterGraph` — for exporters and drivers that
+        need the predicted graph itself (e.g. ``perf_report
+        --export-trace``)."""
+        return self._evaluate(_resolve(opt, params))
+
     def _evaluate(self, opt: "Optimization", *,
                   baseline: Optional[float] = None,
                   point: Optional[Dict[str, Any]] = None
                   ) -> Tuple["Prediction", GraphTransform,
                              Optional[ClusterGraph]]:
         base = self.baseline().makespan if baseline is None else baseline
+        if self.traces is not None:
+            # trace route: the optimization transforms *each* worker's own
+            # graph (workers run the same program, so the same rewrite
+            # applies per worker), then the asymmetric global graph is
+            # rebuilt from the transformed per-worker graphs.
+            tfs = []
+            for wg in self.traces.graphs:
+                tf = GraphTransform(wg)
+                opt.build(self, tf)
+                tfs.append(tf)
+            cg = self._trace_cluster([tf.graph for tf in tfs],
+                                     schedule=tfs[0].schedule)
+            cres = cg.simulate()
+            return (Prediction(opt, base, cres.makespan, cres.global_result,
+                               cres, point or {}), tfs[0], cg)
         tf = opt.apply(self)
         if self.is_cluster:
             cg = ClusterGraph.build(tf.graph, self.specs, cost=self.cost,
@@ -286,14 +366,14 @@ class Scenario:
         """Points differing only in same-length worker specs retune."""
         prev = cache["scn"]
         return (scn.is_cluster and prev is not None
-                and cache["cg"].retunable
                 and popt == cache["opt"]
                 and scn.graph is prev.graph
+                and scn.traces is prev.traces
                 and scn.cost is prev.cost
                 and scn.layer_grad_bytes is prev.layer_grad_bytes
                 and scn.activation_bytes is prev.activation_bytes
                 and scn.collective_mode == prev.collective_mode
-                and len(scn.specs) == len(cache["cg"].workers))
+                and cache["cg"].can_retune(scn.specs))
 
 
 # ============================================================== prediction
@@ -588,6 +668,25 @@ def straggler_specs(n: int, slowdowns: Sequence[float], *, straggler: int = 0
 
 
 # ================================================================= models
+@register("noop", "baseline", algorithm="beyond-paper")
+@dataclasses.dataclass(frozen=True)
+class Noop(Optimization):
+    """Identity: predict the unmodified scenario.
+
+    Useful to route a baseline through the same machinery as real
+    optimizations — e.g. ``perf_report --trace-dir`` renders the imported
+    cluster's per-worker breakdown via ``predict("noop")``, and stacks can
+    be compared against ``noop`` point-for-point in sweeps.
+    """
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        pass
+
+    def retune(self, s: Scenario, tf: GraphTransform,
+               old: "Optimization") -> bool:
+        return True
+
+
 @register("amp", algorithm="Alg 3")
 @dataclasses.dataclass(frozen=True)
 class AMP(Optimization):

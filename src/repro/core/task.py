@@ -47,6 +47,17 @@ def ici_channel(axis: str) -> str:
     return f"ici:{axis}"
 
 
+def _json_safe(v: Any) -> bool:
+    """Whether ``v`` survives a JSON round-trip unchanged (trace records)."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return True
+    if isinstance(v, (list, tuple)):
+        return all(_json_safe(x) for x in v)
+    if isinstance(v, dict):
+        return all(isinstance(k, str) and _json_safe(x) for k, x in v.items())
+    return False
+
+
 def worker_thread(worker: int, thread: str) -> str:
     """Thread name of a worker-local resource inside a cluster graph.
 
@@ -101,6 +112,54 @@ class Task:
 
     def is_collective(self) -> bool:
         return self.kind == TaskKind.COLLECTIVE
+
+    # ------------------------------------------------------- trace records
+    def to_record(self) -> Dict[str, Any]:
+        """JSON-safe dict of the task's trace-facing fields.
+
+        This is the per-event schema of the native JSONL trace format
+        (:mod:`repro.traceio`): ``dur``/``gap`` in seconds, ``kind`` as the
+        :class:`TaskKind` value string, byte counts under ``bytes`` /
+        ``comm_bytes``.  ``gap`` is always written (even 0.0) so importers
+        never re-infer gaps for records we produced; zero/empty optional
+        fields are dropped.  Non-JSON-safe ``attrs`` values are skipped.
+        """
+        rec: Dict[str, Any] = {"name": self.name, "kind": self.kind.value,
+                               "thread": self.thread, "dur": self.duration,
+                               "gap": self.gap}
+        if self.layer:
+            rec["layer"] = self.layer
+        if self.phase:
+            rec["phase"] = self.phase
+        if self.flops:
+            rec["flops"] = self.flops
+        if self.bytes_accessed:
+            rec["bytes"] = self.bytes_accessed
+        if self.comm_bytes:
+            rec["comm_bytes"] = self.comm_bytes
+        if self.comm_axes:
+            rec["comm_axes"] = list(self.comm_axes)
+        attrs = {k: v for k, v in self.attrs.items() if _json_safe(v)}
+        if attrs:
+            rec["attrs"] = attrs
+        return rec
+
+    @staticmethod
+    def from_record(rec: Dict[str, Any]) -> "Task":
+        """Inverse of :meth:`to_record` (missing fields take defaults)."""
+        return Task(
+            name=str(rec.get("name", "?")),
+            kind=TaskKind(rec.get("kind", "compute")),
+            thread=str(rec.get("thread", DEVICE_STREAM)),
+            duration=float(rec.get("dur", 0.0)),
+            gap=float(rec.get("gap", 0.0) or 0.0),
+            layer=rec.get("layer"),
+            phase=rec.get("phase"),
+            flops=float(rec.get("flops", 0.0)),
+            bytes_accessed=float(rec.get("bytes", 0.0)),
+            comm_bytes=float(rec.get("comm_bytes", 0.0)),
+            comm_axes=tuple(rec.get("comm_axes", ())),
+            attrs=dict(rec.get("attrs", {})))
 
     def __repr__(self) -> str:  # keep graphs printable
         lay = f" layer={self.layer}" if self.layer else ""

@@ -57,6 +57,18 @@ class TraceBundle:
         except Exception:
             return None
 
+    def export_chrome(self, path: str,
+                      result: Optional[SimResult] = None) -> Dict[str, Any]:
+        """Export the (simulated) step timeline as Chrome trace-event JSON.
+
+        Opens in Perfetto / ``chrome://tracing``; re-importable via
+        :mod:`repro.traceio` (the round-trip reproduces the simulated
+        makespan).  ``result`` defaults to a fresh :meth:`simulate`.
+        """
+        from repro.traceio import export_graph_trace
+        return export_graph_trace(self.graph, result or self.simulate(),
+                                  path)
+
 
 def lower_and_compile(fn: Callable, *args, mesh=None, in_shardings=None,
                       out_shardings=None, donate_argnums=(), static_argnums=(),

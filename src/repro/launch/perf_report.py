@@ -18,6 +18,13 @@ the kernel separately, input the result into Daydream") — this report:
 
     PYTHONPATH=src python -m repro.launch.perf_report --arch tinyllama-1.1b \
         --shape train_4k --set layout=dp --tag iter4_flash
+
+Trace-import route (no compile; see repro.traceio): import real per-worker
+profiler traces, run a registry stack on the asymmetric imported cluster,
+and export the prediction for Perfetto:
+
+    PYTHONPATH=src python -m repro.launch.perf_report --trace-dir traces/ \
+        --what-if 'amp,bandwidth:factor=2' --export-trace predicted/
 """
 
 import argparse
@@ -187,8 +194,29 @@ def cluster_whatif_report(module, cfg, cost, *, workers: int,
     return format_cluster_report(scenario.predict(DDP()).cluster, title=title)
 
 
+def export_prediction(pred, tf, cg, dest: str) -> str:
+    """Write a prediction's timeline as Chrome trace JSON (Perfetto).
+
+    Cluster routes write one re-importable file per worker into ``dest``
+    (a directory); single-graph routes write one file at ``dest``.
+    """
+    from repro import traceio
+    if cg is not None:
+        paths = traceio.export_cluster_traces(cg, pred.cluster, dest)
+        return (f"exported {len(paths)} per-worker Chrome traces to "
+                f"{dest}/ (open in https://ui.perfetto.dev; re-import with "
+                f"--trace-dir)")
+    if dest.endswith(".json"):
+        path = dest
+    else:
+        os.makedirs(dest, exist_ok=True)
+        path = os.path.join(dest, "trace.json")
+    traceio.export_graph_trace(tf.graph, pred.result, path)
+    return f"exported Chrome trace to {path} (open in https://ui.perfetto.dev)"
+
+
 def whatif_stack_report(module, cfg, cost, spec: str, *, workers: int = 0,
-                        straggler: str = "") -> str:
+                        straggler: str = "", export_trace: str = "") -> str:
     """Evaluate a registry-parsed optimization stack on the compiled step.
 
     ``spec`` is the CLI form parsed against the optimization registry, e.g.
@@ -196,7 +224,8 @@ def whatif_stack_report(module, cfg, cost, spec: str, *, workers: int = 0,
     to right), colons attach ``param=value`` pairs; a ``workers=N`` pair
     sets the scenario's analytical worker count.  Combine with
     ``--cluster N`` to route the same stack through the global ClusterGraph
-    and get the per-worker table.
+    and get the per-worker table, and ``--export-trace`` to dump the
+    predicted timeline for Perfetto.
     """
     from repro.core.optimize import parse_stack
     import dataclasses as _dc
@@ -212,7 +241,7 @@ def whatif_stack_report(module, cfg, cost, spec: str, *, workers: int = 0,
                                      straggler=straggler)
     if overrides:
         scenario = _dc.replace(scenario, **overrides)
-    pred = scenario.predict(opt)
+    pred, tf, cg = scenario.evaluate(opt)
     lines = [f"== what-if {spec} =="]
     for o in (opt.opts if hasattr(opt, "opts") else (opt,)):
         lines.append(f"   {o.spec()}")
@@ -222,13 +251,67 @@ def whatif_stack_report(module, cfg, cost, spec: str, *, workers: int = 0,
     if pred.cluster is not None:
         lines.append(format_cluster_report(
             pred.cluster, title=title or f"cluster x{len(pred.cluster.workers)}"))
+    if export_trace:
+        lines.append(export_prediction(pred, tf, cg, export_trace))
     return "\n".join(lines)
+
+
+def trace_report(args) -> None:
+    """``--trace-dir`` route: import real per-worker profiler traces
+    (Chrome trace-event JSON / native JSONL — see :mod:`repro.traceio`),
+    run an optimization stack from the registry on the imported cluster,
+    and optionally export the prediction back to Chrome format.
+
+        PYTHONPATH=src python -m repro.launch.perf_report \\
+            --trace-dir traces/ --what-if 'amp,bandwidth:factor=2' \\
+            --export-trace predicted/
+    """
+    from repro import traceio
+    from repro.core.optimize import Scenario
+    imp = traceio.load_trace_dir(args.trace_dir)
+    n = imp.num_workers
+    print(f"== imported {n} worker trace(s) from {args.trace_dir} ==")
+    for i, al in enumerate(imp.alignments):
+        print(f"w{i}: {len(imp.traces[i].events)} events, clock "
+              f"scale={al.scale:.6f} offset={al.offset*1e3:+.3f}ms "
+              f"({al.anchors} anchors), start skew "
+              f"{imp.start_skews[i]*1e3:.3f}ms")
+
+    # gradient payloads for insertion-style what-ifs (ddp/zero on a trace
+    # without collectives): traced collective payload split over the traced
+    # backward layers
+    g0 = imp.graphs[0]
+    layers = sorted({t.layer for t in g0.tasks()
+                     if t.layer and t.phase == "bwd"})
+    total = sum(t.comm_bytes for t in g0.tasks()
+                if t.attrs.get("collective"))
+    grads = {l: total / len(layers) for l in layers} \
+        if layers and total else None
+
+    workers = None
+    if args.straggler:
+        idx, slow = _parse_straggler(args.straggler, n)
+        workers = [WorkerSpec(compute_scale=slow if i == idx else 1.0)
+                   for i in range(n)]
+    scenario = Scenario(traces=imp, layer_grad_bytes=grads,
+                        workers=workers if workers is not None else 1)
+    spec = args.what_if or "noop"
+    pred, tf, cg = scenario.evaluate(spec)
+    if args.what_if:
+        print(f"== what-if {spec} on imported traces ==")
+        print(f"baseline  : {pred.baseline * 1e3:10.3f} ms")
+        print(f"predicted : {pred.predicted * 1e3:10.3f} ms "
+              f"({pred.speedup:.2f}x)")
+    print(format_cluster_report(pred.cluster,
+                                title=f"imported cluster x{n}"))
+    if args.export_trace:
+        print(export_prediction(pred, tf, cg, args.export_trace))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--set", action="append", default=[])
     ap.add_argument("--tag", default="modeled_flash")
@@ -241,7 +324,21 @@ def main() -> None:
                     help="registry-parsed optimization stack, e.g. "
                          "'amp,ddp:workers=16,zero' (see repro.core.optimize;"
                          " combine with --cluster for per-worker breakdown)")
+    ap.add_argument("--trace-dir", default="", dest="trace_dir",
+                    help="import per-worker profiler traces (Chrome JSON / "
+                         "native JSONL, one file per worker) instead of "
+                         "compiling --arch; runs --what-if on the imported "
+                         "cluster (see repro.traceio)")
+    ap.add_argument("--export-trace", default="", dest="export_trace",
+                    help="write the predicted timeline as Chrome trace JSON "
+                         "(per-worker files on cluster routes) for Perfetto")
     args = ap.parse_args()
+
+    if args.trace_dir:
+        trace_report(args)
+        return
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape are required (unless --trace-dir)")
 
     cfg = registry.get_config(args.arch)
     for kv in args.set:
@@ -278,10 +375,25 @@ def main() -> None:
     if args.what_if:
         print(whatif_stack_report(module, cfg, cost, args.what_if,
                                   workers=args.cluster,
-                                  straggler=args.straggler))
+                                  straggler=args.straggler,
+                                  export_trace=args.export_trace))
     elif args.cluster:
-        print(cluster_whatif_report(module, cfg, cost, workers=args.cluster,
-                                    straggler=args.straggler))
+        if args.export_trace:
+            # one evaluation feeds both the report and the export
+            scenario, title = build_scenario(module, cfg, cost,
+                                             workers=args.cluster,
+                                             straggler=args.straggler)
+            pred, tf, cg = scenario.evaluate("ddp")
+            print(format_cluster_report(pred.cluster, title=title))
+            print(export_prediction(pred, tf, cg, args.export_trace))
+        else:
+            print(cluster_whatif_report(module, cfg, cost,
+                                        workers=args.cluster,
+                                        straggler=args.straggler))
+    elif args.export_trace:
+        scenario, _ = build_scenario(module, cfg, cost)
+        print(export_prediction(*scenario.evaluate("noop"),
+                                args.export_trace))
     print(f"attention-loop bytes replaced: {tot['attn_bytes']/1e9:.1f} GB "
           f"-> flash kernel {fb/1e9:.2f} GB per device")
     os.makedirs(args.out, exist_ok=True)

@@ -1,0 +1,58 @@
+"""Trace I/O: real per-worker profiler traces <-> simulation graphs.
+
+Daydream's premise (§4.1) is that the dependency graph comes from
+*low-level traces*; this package supplies that path for the cluster
+simulator.  It turns N independently-captured per-worker traces into the
+asymmetric global graph :meth:`repro.core.cluster.ClusterGraph
+.from_worker_graphs` simulates, and exports predictions back out so they
+open in Perfetto.
+
+Pipeline::
+
+    trace_dir/worker*.{jsonl,json}
+        │  readers: native JSONL (events.read_jsonl) and Chrome
+        │  trace-event JSON (chrome.read_chrome) -> TraceEvent streams
+        ▼
+    align.align_traces       dPRO-style clock alignment: least-squares
+        │                    per-worker offset+drift, anchored on matched
+        ▼                    collective end times
+    importer.graph_from_events
+        │                    tasks + stream-order lanes + flow/correlation
+        ▼                    cross-thread edges, host-gap inference
+    ClusterGraph.from_traces / Scenario(trace_dir=...)
+        │                    matched collectives -> ring / hierarchical /
+        ▼                    fused cross-worker structures
+    chrome.export_graph_trace / export_cluster_traces
+                             predictions -> Chrome JSON (Perfetto);
+                             re-importable (round-trip invariant)
+
+Format contract: :mod:`repro.traceio.events` (native JSONL) and
+:mod:`repro.traceio.chrome` (Chrome trace-event subset).  Synthetic trace
+sets for tests/benchmarks: :mod:`repro.traceio.synthetic`.
+
+User surface: ``Scenario(trace_dir=...)`` runs any registered optimization
+stack on imported traces; ``python -m repro.launch.perf_report --trace-dir
+DIR [--what-if STACK] [--export-trace OUT]`` is the CLI form.
+"""
+
+from .events import (TraceEvent, TraceImportError, WorkerTrace, classify,
+                     infer_collective, read_jsonl, write_jsonl)
+from .chrome import (chrome_trace_dict, events_from_graph,
+                     export_cluster_traces, export_graph_trace, read_chrome)
+from .align import (ClockAlignment, align_traces, apply_alignment,
+                    collective_end_anchors)
+from .importer import (ImportedCluster, find_worker_files, graph_from_events,
+                       load_trace_dir, load_worker_trace)
+from .synthetic import synthetic_cluster_traces, write_synthetic_trace_dir
+
+__all__ = [
+    "TraceEvent", "TraceImportError", "WorkerTrace",
+    "classify", "infer_collective", "read_jsonl", "write_jsonl",
+    "chrome_trace_dict", "events_from_graph", "export_cluster_traces",
+    "export_graph_trace", "read_chrome",
+    "ClockAlignment", "align_traces", "apply_alignment",
+    "collective_end_anchors",
+    "ImportedCluster", "find_worker_files", "graph_from_events",
+    "load_trace_dir", "load_worker_trace",
+    "synthetic_cluster_traces", "write_synthetic_trace_dir",
+]

@@ -1,0 +1,429 @@
+"""Chrome trace-event JSON: reader and exporters.
+
+The Chrome trace-event format is what the JAX/XLA profiler, TensorBoard's
+trace viewer, and most GPU profilers emit, and what Perfetto / ``chrome://
+tracing`` open.  This module reads the subset needed to reconstruct a
+dependency graph, and writes predictions back out so simulated timelines
+open in the same viewers.
+
+Reader contract (:func:`read_chrome`)
+-------------------------------------
+
+* The file is either ``{"traceEvents": [...]}`` or a bare event list.
+* ``ph == "X"`` complete events become :class:`~repro.traceio.events
+  .TraceEvent`\\ s; ``ts``/``dur`` are microseconds (per the spec) and are
+  converted to seconds.  Task metadata is taken from ``args`` when present
+  (``kind``, ``gap``, ``layer``, ``phase``, ``flops``, ``bytes``,
+  ``comm_bytes``, ``collective``, ``group_size``, ``id``) and inferred from
+  the event name/thread otherwise.
+* ``ph == "M"`` ``thread_name``/``process_name`` metadata names the
+  threads; unnamed tids become ``t<tid>`` (prefixed ``p<pid>/`` when the
+  file contains several pids).
+* Dependencies: flow events (``ph`` in ``s``/``t``/``f``) keyed by
+  ``(cat, id)``.  A flow binds to the slice named by ``args.bind`` (our
+  export extension: the X event's ``args.id``); foreign traces fall back to
+  timestamp binding — ``s`` to the latest slice on its (pid, tid) starting
+  at or before ``ts``, ``t``/``f`` to the earliest slice starting at or
+  after ``ts``.  Each ``t``/``f`` depends on the closest preceding ``s`` of
+  its flow id.  Events sharing ``args.correlation`` (GPU launch/kernel
+  correlation ids) are also linked earliest-to-rest.
+
+Exporters
+---------
+
+:func:`events_from_graph` turns a simulated graph into events (explicit
+cross-thread deps; same-thread order is carried by timestamps), and
+:func:`export_graph_trace` / :func:`export_cluster_traces` write Chrome
+JSON — the latter writes **one file per worker**, collapsing cross-worker
+collective structures (ring legs / hierarchical stages, tagged with
+``attrs["coll_gid"]`` at build time) back into one per-worker collective
+event spanning first-leg start to last-leg finish, exactly what a real
+per-worker profiler would have captured.  Cross-worker edges are dropped —
+each file stands alone, which is what makes the export → import round trip
+a real test of trace *matching* rather than graph serialization.
+"""
+
+from __future__ import annotations
+
+import bisect
+import collections
+import json
+import os
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.graph import DependencyGraph
+from repro.core.simulate import SimResult, simulate
+from repro.core.task import Task, TaskKind, split_worker_thread, _json_safe
+
+from .events import TraceEvent, TraceImportError, WorkerTrace
+
+_US = 1e6     # seconds -> Chrome microseconds
+
+_LEG_SUFFIX = re.compile(r":leg\d+$")
+
+
+# ================================================================== reading
+def read_chrome(path: str, worker: int = 0) -> WorkerTrace:
+    """Read one worker's Chrome trace-event JSON file (contract above)."""
+    with open(path) as f:
+        try:
+            data = json.load(f)
+        except json.JSONDecodeError as e:
+            raise TraceImportError(f"{path}: not valid JSON: {e}") from e
+    raw = data.get("traceEvents") if isinstance(data, dict) else data
+    if not isinstance(raw, list):
+        raise TraceImportError(
+            f"{path}: expected a traceEvents list, got {type(raw).__name__}")
+
+    thread_names: Dict[Tuple[Any, Any], str] = {}
+    xs: List[Tuple[Dict[str, Any], TraceEvent]] = []
+    pids = set()
+    for ev in raw:
+        if not isinstance(ev, dict):
+            continue
+        ph = ev.get("ph")
+        if ph == "M" and ev.get("name") == "thread_name":
+            thread_names[(ev.get("pid"), ev.get("tid"))] = \
+                str(ev.get("args", {}).get("name", ""))
+        elif ph == "X":
+            pids.add(ev.get("pid"))
+
+    def thread_of(ev: Dict[str, Any]) -> str:
+        key = (ev.get("pid"), ev.get("tid"))
+        name = thread_names.get(key) or f"t{ev.get('tid')}"
+        if len(pids) > 1:
+            name = f"p{ev.get('pid')}/{name}"
+        return name
+
+    by_eid: Dict[int, TraceEvent] = {}
+    for ev in raw:
+        if not isinstance(ev, dict) or ev.get("ph") != "X":
+            continue
+        args = ev.get("args") or {}
+        gap = args.get("gap")
+        te = TraceEvent(
+            name=str(ev.get("name", "?")), thread=thread_of(ev),
+            ts=float(ev.get("ts", 0.0)) / _US,
+            dur=float(ev.get("dur", 0.0)) / _US,
+            eid=int(args["id"]) if "id" in args else len(xs),
+            kind=args.get("kind"),
+            gap=None if gap is None else float(gap),
+            layer=args.get("layer"), phase=args.get("phase"),
+            flops=float(args.get("flops", 0.0)),
+            bytes_accessed=float(args.get("bytes", 0.0)),
+            comm_bytes=float(args.get("comm_bytes", 0.0)),
+            collective=args.get("collective"),
+            group_size=int(args.get("group_size") or 0),
+            attrs={k: v for k, v in args.items()
+                   if k not in ("id", "kind", "gap", "layer", "phase",
+                                "flops", "bytes", "comm_bytes", "collective",
+                                "group_size", "correlation") and _json_safe(v)})
+        if te.eid in by_eid:
+            raise TraceImportError(f"{path}: duplicate event id {te.eid}")
+        by_eid[te.eid] = te
+        xs.append((ev, te))
+
+    _bind_flows(path, raw, xs, by_eid)
+    _link_correlations(xs)
+    events = [te for _, te in xs]
+    return WorkerTrace(worker=worker, events=events, source=path)
+
+
+def _bind_flows(path: str, raw: List[Any],
+                xs: List[Tuple[Dict[str, Any], TraceEvent]],
+                by_eid: Dict[int, TraceEvent]) -> None:
+    """Turn flow events into TraceEvent.deps per the reader contract."""
+    # per-(pid, tid) slice starts, sorted, for timestamp binding
+    slices: Dict[Tuple[Any, Any], List[Tuple[float, TraceEvent]]] = \
+        collections.defaultdict(list)
+    for ev, te in xs:
+        slices[(ev.get("pid"), ev.get("tid"))].append(
+            (float(ev.get("ts", 0.0)), te))
+    for lst in slices.values():
+        lst.sort(key=lambda p: p[0])
+    starts = {k: [p[0] for p in v] for k, v in slices.items()}
+
+    def bind(ev: Dict[str, Any]) -> Optional[TraceEvent]:
+        args = ev.get("args") or {}
+        if "bind" in args:
+            te = by_eid.get(int(args["bind"]))
+            if te is None:
+                raise TraceImportError(
+                    f"{path}: flow event binds to unknown event id "
+                    f"{args['bind']}")
+            return te
+        key = (ev.get("pid"), ev.get("tid"))
+        if key not in starts:
+            return None
+        ts = float(ev.get("ts", 0.0))
+        if ev.get("ph") == "s":
+            idx = bisect.bisect_right(starts[key], ts) - 1
+        else:
+            idx = bisect.bisect_left(starts[key], ts)
+        if 0 <= idx < len(slices[key]):
+            return slices[key][idx][1]
+        return None
+
+    flows: Dict[Tuple[Any, Any], List[Tuple[float, str, Dict[str, Any]]]] = \
+        collections.defaultdict(list)
+    for ev in raw:
+        if isinstance(ev, dict) and ev.get("ph") in ("s", "t", "f"):
+            flows[(ev.get("cat"), ev.get("id"))].append(
+                (float(ev.get("ts", 0.0)), ev.get("ph"), ev))
+    for group in flows.values():
+        group.sort(key=lambda p: (p[0], p[1] != "s"))
+        srcs: List[Tuple[float, TraceEvent]] = []
+        for ts, ph, ev in group:
+            te = bind(ev)
+            if te is None:
+                continue
+            if ph == "s":
+                srcs.append((ts, te))
+            elif srcs:
+                src = max((s for s in srcs if s[0] <= ts),
+                          default=srcs[0], key=lambda s: s[0])[1]
+                if src.eid != te.eid:
+                    te.deps.append(src.eid)
+
+
+def _link_correlations(xs: List[Tuple[Dict[str, Any], TraceEvent]]) -> None:
+    corr: Dict[Any, List[TraceEvent]] = collections.defaultdict(list)
+    for ev, te in xs:
+        args = ev.get("args") or {}
+        cid = args.get("correlation", args.get("correlation_id"))
+        if cid is not None:
+            corr[cid].append(te)
+    for group in corr.values():
+        if len(group) < 2:
+            continue
+        group.sort(key=lambda t: t.ts)
+        first = group[0]
+        for te in group[1:]:
+            if first.eid != te.eid:
+                te.deps.append(first.eid)
+
+
+# ================================================================ exporting
+def _event_from_task(t: Task, ts: float, eid: int) -> TraceEvent:
+    attrs = {k: v for k, v in t.attrs.items()
+             if k not in ("collective", "group_size") and _json_safe(v)}
+    return TraceEvent(
+        name=t.name, thread=t.thread, ts=ts, dur=t.duration, eid=eid,
+        kind=t.kind.value, gap=t.gap, layer=t.layer, phase=t.phase,
+        flops=t.flops, bytes_accessed=t.bytes_accessed,
+        comm_bytes=t.comm_bytes, collective=t.attrs.get("collective"),
+        group_size=int(t.attrs.get("group_size") or 0), attrs=attrs)
+
+
+def events_from_graph(graph: DependencyGraph,
+                      result: Optional[SimResult] = None
+                      ) -> List[TraceEvent]:
+    """Turn a (simulated) graph into trace events.
+
+    Timestamps come from ``result`` (simulated on the spot when omitted);
+    gaps are written explicitly from the tasks, so re-importing never
+    infers.  Cross-thread edges become explicit ``deps``; same-thread
+    edges are implied by per-thread timestamp order (the stream-order
+    contract), which every lane-consistent simulation satisfies.
+    """
+    result = result or simulate(graph)
+    events: List[TraceEvent] = []
+    eid_of: Dict[int, int] = {}
+    for thread, lane in graph.lanes.items():
+        pos = {uid: i for i, uid in enumerate(lane)}
+        for uid in sorted(lane, key=lambda u: (result.start[u], pos[u])):
+            t = graph.get(uid)
+            ev = _event_from_task(t, result.start[uid], len(events))
+            eid_of[uid] = ev.eid
+            events.append(ev)
+    for t in graph.tasks():
+        for c in graph.children(t):
+            if c.thread != t.thread:
+                events[eid_of[c.uid]].deps.append(eid_of[t.uid])
+    for ev in events:
+        ev.deps = sorted(set(ev.deps))
+    return events
+
+
+def chrome_trace_dict(events: Sequence[TraceEvent], *, pid: int = 0,
+                      process_name: str = "worker0") -> Dict[str, Any]:
+    """Chrome trace-event JSON object for ``events`` (one process)."""
+    tids: Dict[str, int] = {}
+    out: List[Dict[str, Any]] = [
+        {"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+         "args": {"name": process_name}}]
+    for ev in events:
+        if ev.thread not in tids:
+            tids[ev.thread] = len(tids) + 1
+            out.append({"ph": "M", "name": "thread_name", "pid": pid,
+                        "tid": tids[ev.thread],
+                        "args": {"name": ev.thread}})
+    for ev in events:
+        # free-form attrs first; the reserved metadata keys (the ones
+        # read_chrome strips back out of args) must win over any
+        # same-named attr, else an attr called "id"/"gap" would corrupt
+        # flow binding and gap handling on re-import
+        args: Dict[str, Any] = dict(ev.attrs)
+        args.update({"id": ev.eid, "kind": ev.kind,
+                     "gap": 0.0 if ev.gap is None else ev.gap})
+        for key, val in (("layer", ev.layer), ("phase", ev.phase),
+                         ("collective", ev.collective)):
+            if val:
+                args[key] = val
+        for key, val in (("flops", ev.flops), ("bytes", ev.bytes_accessed),
+                         ("comm_bytes", ev.comm_bytes),
+                         ("group_size", ev.group_size)):
+            if val:
+                args[key] = val
+        out.append({"ph": "X", "name": ev.name, "cat": ev.kind or "task",
+                    "pid": pid, "tid": tids[ev.thread],
+                    "ts": ev.ts * _US, "dur": ev.dur * _US, "args": args})
+    fid = 0
+    by_eid = {ev.eid: ev for ev in events}
+    for ev in events:
+        for dep in ev.deps:
+            src = by_eid[dep]
+            fid += 1
+            out.append({"ph": "s", "cat": "dep", "name": "dep", "id": fid,
+                        "pid": pid, "tid": tids[src.thread],
+                        "ts": src.ts * _US, "args": {"bind": src.eid}})
+            out.append({"ph": "f", "cat": "dep", "name": "dep", "id": fid,
+                        "bp": "e", "pid": pid, "tid": tids[ev.thread],
+                        "ts": ev.ts * _US, "args": {"bind": ev.eid}})
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def export_graph_trace(graph: DependencyGraph,
+                       result: Optional[SimResult] = None,
+                       path: Optional[str] = None, *,
+                       process_name: str = "worker0") -> Dict[str, Any]:
+    """Export one graph's simulated timeline as Chrome trace JSON.
+
+    Returns the trace dict; writes it to ``path`` when given.  Open the
+    file in Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``.
+    """
+    trace = chrome_trace_dict(events_from_graph(graph, result),
+                              process_name=process_name)
+    if path is not None:
+        with open(path, "w") as f:
+            json.dump(trace, f)
+    return trace
+
+
+# ------------------------------------------------- cluster per-worker export
+def _collective_origin(t: Task) -> Optional[str]:
+    """Base collective name of a wired piece (ring leg / hierarchical
+    stage), or None for ordinary tasks."""
+    if "ring_round" in t.attrs:
+        return _LEG_SUFFIX.sub("", t.name)
+    stage = t.attrs.get("stage")
+    if stage and t.name.endswith(":" + stage):
+        return t.name[: -len(stage) - 1]
+    return None
+
+
+def _collapse_worker(cluster_graph, res: SimResult,
+                     worker: int, tasks: Sequence[Task]
+                     ) -> Tuple[List[TraceEvent], Dict[int, int]]:
+    """Worker ``i``'s local events: ordinary tasks as-is, collective pieces
+    collapsed back into one event per wired collective (by ``coll_gid``)."""
+    n = len(cluster_graph.workers)
+    singles: List[Task] = []
+    groups: Dict[int, List[Task]] = collections.defaultdict(list)
+    for t in tasks:
+        if t.thread.endswith("trace/skew"):
+            continue          # import artifact; skew is carried by the ts
+        gid = t.attrs.get("coll_gid")
+        if gid is not None and _collective_origin(t) is not None:
+            groups[gid].append(t)
+        else:
+            singles.append(t)
+
+    drafts: List[Tuple[float, TraceEvent, List[int]]] = []
+    unit_of: Dict[int, int] = {}       # task uid -> draft index
+    for t in singles:
+        ev = _event_from_task(t, res.start[t.uid], -1)
+        unit_of[t.uid] = len(drafts)
+        drafts.append((ev.ts, ev, [t.uid]))
+    for gid in sorted(groups):
+        pieces = groups[gid]
+        ts = min(res.start[p.uid] for p in pieces)
+        end = max(res.finish[p.uid] for p in pieces)
+        proto = min(pieces, key=lambda p: res.start[p.uid])
+        payload = max(p.comm_bytes for p in pieces)
+        if any("ring_round" in p.attrs for p in pieces):
+            payload *= n          # legs carry payload/n chunks
+        ev = TraceEvent(
+            name=_collective_origin(proto) or proto.name,
+            thread=proto.thread, ts=ts, dur=end - ts, eid=-1,
+            kind=TaskKind.COLLECTIVE.value, gap=0.0, phase="comm",
+            comm_bytes=payload, collective=proto.attrs.get("collective"),
+            group_size=n)
+        idx = len(drafts)
+        drafts.append((ts, ev, [p.uid for p in pieces]))
+        for p in pieces:
+            unit_of[p.uid] = idx
+
+    # order per thread by ts (stable), assign eids, localize thread names
+    order = sorted(range(len(drafts)), key=lambda i: (drafts[i][0], i))
+    events: List[TraceEvent] = []
+    eid_of_unit: Dict[int, int] = {}
+    for i in order:
+        _, ev, _ = drafts[i]
+        ev.eid = len(events)
+        ev.thread = split_worker_thread(ev.thread)[1]
+        eid_of_unit[i] = ev.eid
+        events.append(ev)
+
+    # project global edges onto worker-local event deps (one-step bridge
+    # across the zero-duration cluster/sync barriers; cross-worker edges
+    # are dropped — each worker's file stands alone)
+    g = cluster_graph.graph
+    for t in tasks:
+        if t.uid not in unit_of:
+            continue
+        dst = unit_of[t.uid]
+        parents: List[Task] = []
+        for p in g.parents(t):
+            w, _ = split_worker_thread(p.thread)
+            if w == worker:
+                parents.append(p)
+            elif w is None:                       # barrier: bridge one step
+                parents.extend(pp for pp in g.parents(p)
+                               if split_worker_thread(pp.thread)[0] == worker)
+        for p in parents:
+            src = unit_of.get(p.uid)
+            if src is None or src == dst:
+                continue
+            if events[eid_of_unit[src]].thread != events[eid_of_unit[dst]].thread:
+                events[eid_of_unit[dst]].deps.append(events[eid_of_unit[src]].eid)
+    for ev in events:
+        ev.deps = sorted(set(ev.deps))
+    return events, eid_of_unit
+
+
+def export_cluster_traces(cluster_graph, result, out_dir: str, *,
+                          stem: str = "worker") -> List[str]:
+    """Export a simulated cluster as N per-worker Chrome trace files.
+
+    ``result`` is the :class:`~repro.core.cluster.ClusterResult` of
+    ``cluster_graph.simulate()``.  Writes ``<stem><i>.trace.json`` per
+    worker into ``out_dir`` and returns the paths.  The files re-import via
+    :meth:`ClusterGraph.from_traces` — the round-trip invariant the test
+    suite anchors on: a uniform cluster's re-import reproduces the
+    predicted makespan.
+    """
+    res = result.global_result
+    os.makedirs(out_dir, exist_ok=True)
+    partition = cluster_graph._worker_partition()
+    paths: List[str] = []
+    for i in range(len(cluster_graph.workers)):
+        events, _ = _collapse_worker(cluster_graph, res, i,
+                                     partition.get(i, []))
+        trace = chrome_trace_dict(events, pid=i, process_name=f"worker{i}")
+        path = os.path.join(out_dir, f"{stem}{i}.trace.json")
+        with open(path, "w") as f:
+            json.dump(trace, f)
+        paths.append(path)
+    return paths

@@ -248,18 +248,54 @@ class TestRetune:
         assert retuned.makespan == fresh.makespan
         assert retuned.worker_makespans() == fresh.worker_makespans()
 
-    def test_retune_rejects_count_change_and_hierarchical(self, graph):
+    def test_retune_rejects_count_change_and_pod_change(self, graph):
         from repro.core import ClusterGraph, GraphError
         tf = whatif.what_if_distributed(graph, GRADS, 4)
         cg = ClusterGraph.build(tf.graph, 4)
         with pytest.raises(GraphError):
             cg.retune(8)
+        assert not cg.can_retune(8)
         hier = ClusterGraph.build(tf.graph,
                                   [WorkerSpec(pod=i % 2) for i in range(4)],
                                   collective_mode="hierarchical")
-        assert not hier.retunable
+        # stage durations are recomputable in place; only the pod *layout*
+        # is structural
+        assert hier.can_retune([WorkerSpec(pod=i % 2) for i in range(4)])
+        assert not hier.can_retune([WorkerSpec(pod=i // 2) for i in range(4)])
         with pytest.raises(GraphError):
-            hier.retune([WorkerSpec(pod=i % 2) for i in range(4)])
+            hier.retune([WorkerSpec(pod=i // 2) for i in range(4)])
+
+    def test_hierarchical_retune_matches_fresh_build(self, graph):
+        """Satellite (PR 3): hierarchical stage durations retune in place —
+        sweeps over bandwidth/compute scales reuse one build, bit-identically
+        to rebuilding per point, as long as the pod layout is fixed."""
+        from repro.core import ClusterGraph
+        tf = whatif.what_if_distributed(graph, GRADS, 8)
+        pods = [WorkerSpec(pod=i // 4) for i in range(8)]
+        cg = ClusterGraph.build(tf.graph, pods,
+                                collective_mode="hierarchical")
+        skew = [WorkerSpec(pod=i // 4,
+                           bandwidth_scale=0.5 if i == 2 else 1.0,
+                           compute_scale=2.0 if i == 5 else 1.0)
+                for i in range(8)]
+        retuned = cg.retune(skew).simulate()
+        fresh = ClusterGraph.build(tf.graph, skew,
+                                   collective_mode="hierarchical").simulate()
+        assert retuned.makespan == fresh.makespan
+        assert retuned.worker_makespans() == fresh.worker_makespans()
+
+    def test_sweep_reuses_hierarchical_build(self, graph):
+        """The PR-2 sweep-reuse speedup now extends to hierarchical mode:
+        same-pod-layout points retune one build with identical predictions."""
+        scn = Scenario(graph, layer_grad_bytes=GRADS,
+                       workers=[WorkerSpec(pod=i // 2) for i in range(4)],
+                       collective_mode="hierarchical")
+        grid = {"workers": [[WorkerSpec(pod=i // 2, bandwidth_scale=s)
+                             for i in range(4)] for s in (1.0, 0.5, 0.25)]}
+        reused = scn.sweep("ddp", grid, reuse=True)
+        rebuilt = scn.sweep("ddp", grid, reuse=False)
+        assert [p.predicted for p in reused] == \
+            [p.predicted for p in rebuilt]
 
     def test_stale_result_breakdown_survives_retune(self, graph):
         """A lazily-split ClusterResult must reflect the durations at its

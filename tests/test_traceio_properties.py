@@ -1,0 +1,89 @@
+"""Hypothesis property tests for the trace I/O subsystem.
+
+Optional-dependency module (``pytest.importorskip``) like the other
+``*_properties`` files: a clean machine still collects and runs the rest of
+the suite.
+
+Properties:
+
+* **Replicate equivalence** (the ISSUE's property test): for any training
+  step shape, worker count, and collective mode, importing N identical
+  per-worker traces through the full JSONL round trip matches the
+  replicate path (``ClusterGraph.build``) to float precision.
+* **Import determinism**: export -> import -> export is a fixed point of
+  the event stream (names/durations/deps stable).
+* **Alignment exactness**: affine clock skew on any synthetic cluster is
+  recovered to numerical precision from the collective-end anchors.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given, settings
+
+from repro.core import ClusterGraph, CostModel, whatif, simulate
+from repro.traceio import (align_traces, events_from_graph,
+                           graph_from_events, read_jsonl,
+                           synthetic_cluster_traces, write_jsonl)
+from repro.traceio.events import WorkerTrace
+from synthgraphs import training_step_graph
+
+durations = st.floats(min_value=1e-5, max_value=1e-2,
+                      allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=25, deadline=None)
+@given(layers=st.integers(1, 8), n=st.integers(2, 6),
+       mode=st.sampled_from(["ring", "fused", "hierarchical"]),
+       fwd=durations, bwd=durations, grad_mb=st.floats(0.5, 64.0))
+def test_imported_identical_workers_match_replicate_path(layers, n, mode,
+                                                         fwd, bwd, grad_mb):
+    g = training_step_graph(layers=layers, fwd=fwd, bwd=bwd)
+    grads = {f"l{i}": grad_mb * 1e6 for i in range(layers)}
+    tf = whatif.what_if_distributed(g, grads, num_workers=n)
+    cost = CostModel()
+    build = ClusterGraph.build(tf.graph, n, cost=cost,
+                               collective_mode=mode).simulate()
+    lines = write_jsonl(events_from_graph(tf.graph))
+    worker_graphs = [graph_from_events(read_jsonl(iter(lines), w))
+                     for w in range(n)]
+    imported = ClusterGraph.from_worker_graphs(
+        worker_graphs, cost=cost, collective_mode=mode).simulate()
+    assert imported.makespan == pytest.approx(build.makespan, rel=1e-12)
+    assert imported.worker_makespans() == \
+        pytest.approx(build.worker_makespans(), rel=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(layers=st.integers(1, 10), fwd=durations, bwd=durations,
+       upd=durations)
+def test_export_import_is_fixed_point(layers, fwd, bwd, upd):
+    g = training_step_graph(layers=layers, fwd=fwd, bwd=bwd, upd=upd)
+    res = simulate(g)
+    ev1 = events_from_graph(g, res)
+    g2 = graph_from_events(WorkerTrace(0, ev1))
+    res2 = simulate(g2)
+    assert res2.makespan == pytest.approx(res.makespan, rel=1e-12)
+    ev2 = events_from_graph(g2, res2)
+    assert [(e.name, e.thread, e.dur, e.deps) for e in ev1] == \
+        [(e.name, e.thread, e.dur, e.deps) for e in ev2]
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 5), layers=st.integers(2, 8),
+       offsets=st.lists(st.floats(-1.0, 1.0), min_size=5, max_size=5),
+       drifts=st.lists(st.floats(0.95, 1.05), min_size=5, max_size=5))
+def test_alignment_recovers_affine_clock_skew(n, layers, offsets, drifts):
+    # worker 0 is the reference timeline: its clock stays clean so the
+    # recovered maps are directly comparable to the injected skews
+    off = [0.0] + offsets[1:n]
+    dr = [1.0] + drifts[1:n]
+    traces = synthetic_cluster_traces(
+        n, layers=layers, clock_offsets=off, clock_drifts=dr)
+    aligns = align_traces(traces)
+    for al, off, drift in zip(aligns, off, dr):
+        assert al.anchors == layers
+        assert al.scale == pytest.approx(1.0 / drift, rel=1e-6)
+        assert al.offset == pytest.approx(-off / drift, rel=1e-6,
+                                          abs=1e-9)
