@@ -1,0 +1,122 @@
+"""Pipeline-plan build cost: O(S*M) placement + partition-cached sweeps.
+
+Two CI gates for the PR-4 plan layer (repro.parallel.plan):
+
+1. **Plan size is O(S * M), independent of profile size** — placing a plan
+   partitions the profile once into S scalar stage profiles; the placed
+   global graph contains only schedule tasks (S*dp microbatch lanes, hop
+   legs, per-stage rings, updates), never clones of the profile's tasks.
+   Gate: the placed task count equals the closed-form count exactly, for a
+   ~38k-task profile.
+
+2. **Sweep reuse >= 3x over per-point rebuilds on a microbatch grid** —
+   ``Scenario.sweep`` caches the stage partition per (pre-stack, stages),
+   so a microbatch/schedule grid point skips the O(V) profile copy + scan
+   and only rebuilds the O(S*M) schedule graph.  ``reuse=False`` repays
+   the full partition per point; predictions must match exactly.
+
+CSV: bench,profile_tasks,plan_tasks,points,mode,seconds,speedup_vs_rebuild
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (DependencyGraph, Scenario, Task, TaskKind,
+                        DEVICE_STREAM, HOST_THREAD)
+from repro.core.optimize import PipelineParallel
+from repro.parallel import ParallelPlan
+
+from benchmarks.common import fmt_csv
+
+LAYERS = 96
+TASKS_PER_PHASE = 100           # per layer: 100 fwd + 100 bwd ops
+STAGES = 4
+DP = 2
+MICROBATCHES = 16
+POINTS = 8
+
+
+def big_profile(layers: int = LAYERS) -> DependencyGraph:
+    g = DependencyGraph()
+    h = g.add_task(Task("host:dispatch", TaskKind.HOST, HOST_THREAD, 20e-6))
+    for i in range(layers):
+        for k in range(TASKS_PER_PHASE):
+            t = g.add_task(Task(f"fwd:l{i}:{k}", TaskKind.COMPUTE,
+                                DEVICE_STREAM, 1e-5, layer=f"l{i}",
+                                phase="fwd"))
+            if i == 0 and k == 0:
+                g.add_edge(h, t)
+    for i in reversed(range(layers)):
+        for k in range(TASKS_PER_PHASE):
+            g.add_task(Task(f"bwd:l{i}:{k}", TaskKind.COMPUTE,
+                            DEVICE_STREAM, 2e-5, layer=f"l{i}",
+                            phase="bwd"))
+    for i in range(layers):
+        g.add_task(Task(f"upd:l{i}", TaskKind.COMPUTE, DEVICE_STREAM, 5e-6,
+                        layer=f"l{i}", phase="update"))
+    return g
+
+
+def expected_plan_tasks(S: int, M: int, dp: int) -> int:
+    """Closed-form task count of a placed plan (the O(S*M) gate)."""
+    n = 0
+    for s in range(S):
+        per_worker = 2 * M + 1                       # F, B, update
+        per_worker += M if s < S - 1 else 0          # act sends
+        per_worker += M if s > 0 else 0              # grad sends
+        per_worker += 2 * (dp - 1) if dp > 1 else 0  # stage ring legs
+        n += dp * per_worker
+    return n
+
+
+def run() -> str:
+    g = big_profile()
+    grads = {f"l{i}": 40e6 for i in range(LAYERS)}
+    acts = {f"l{i}": 4e6 for i in range(LAYERS)}
+    scenario = Scenario(g, layer_grad_bytes=grads, activation_bytes=acts)
+
+    # gate 1: plan task count is exactly O(S*M), profile-size-independent
+    plan = ParallelPlan.from_profile(g, STAGES, MICROBATCHES, dp=DP,
+                                     activation_bytes=acts,
+                                     layer_grad_bytes=grads)
+    cg = plan.place()
+    want = expected_plan_tasks(STAGES, MICROBATCHES, DP)
+    assert len(cg.graph) == want, (
+        f"placed plan has {len(cg.graph)} tasks, expected the closed-form "
+        f"{want} (S={STAGES}, M={MICROBATCHES}, dp={DP}) — placement must "
+        f"not scale with the {len(g)}-task profile")
+
+    # gate 2: microbatch-grid sweep reuses the cached partition
+    opt = PipelineParallel(stages=STAGES, dp=DP)
+    grid = {"microbatches": [2 * (i + 1) for i in range(POINTS)]}
+
+    def timed(reuse: bool):
+        t0 = time.perf_counter()
+        preds = scenario.sweep(opt, grid, reuse=reuse)
+        return time.perf_counter() - t0, [p.predicted for p in preds]
+
+    t_reuse, p_reuse = timed(True)
+    t_rebuild, p_rebuild = timed(False)
+    t_reuse = min(t_reuse, timed(True)[0])
+    t_rebuild = min(t_rebuild, timed(False)[0])
+    assert p_reuse == p_rebuild, (
+        "partition-cached sweep diverged from per-point rebuilds")
+    speedup = t_rebuild / t_reuse
+    assert speedup >= 3.0, (
+        f"pipeline sweep reuse only {speedup:.2f}x faster than per-point "
+        f"rebuilds (acceptance: >=3x)")
+
+    rows = [
+        ["plan_size", len(g), len(cg.graph), 1, "place", "-", "-"],
+        ["microbatch_sweep", len(g), len(cg.graph), POINTS, "reuse",
+         f"{t_reuse:.3f}", f"{speedup:.1f}"],
+        ["microbatch_sweep", len(g), len(cg.graph), POINTS, "rebuild",
+         f"{t_rebuild:.3f}", "1.0"],
+    ]
+    return fmt_csv(rows, ["bench", "profile_tasks", "plan_tasks", "points",
+                          "mode", "seconds", "speedup_vs_rebuild"])
+
+
+if __name__ == "__main__":
+    print(run())

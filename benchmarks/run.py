@@ -22,6 +22,7 @@ BENCHES = {
     "sim_engine": "benchmarks.bench_sim",
     "sweep_reuse": "benchmarks.bench_sweep",
     "traceio_import": "benchmarks.bench_traceio",
+    "pipeline_plan": "benchmarks.bench_pipeline",
 }
 
 

@@ -90,6 +90,38 @@ def main() -> None:
         print(f"  {s:5.2f}x links: step {pred.predicted*1e3:9.3f} ms, "
               f"straggler w{pred.cluster.straggler()}")
 
+    # pipeline / hybrid parallelism through the same registry: the traced
+    # profile is partitioned into balanced stages and placed on real
+    # workers through the cluster simulator — p2p activation/gradient hops,
+    # per-stage DP gradient rings — so "will 1F1B help my config?" is one
+    # predict() away, composable with every other what-if
+    pp = Scenario(bundle.graph, cost=bundle.cost, layer_grad_bytes=grads,
+                  activation_bytes=acts)
+    print("\npipeline / hybrid PPxDP (device-program makespan; host "
+          "dispatch not modeled):")
+    pipelines = [
+        ("GPipe 4 stages x 16 mb", "pipeline:stages=4,microbatches=16"),
+        ("1F1B  4 stages x 16 mb",
+         "pipeline:stages=4,microbatches=16,schedule=1f1b"),
+        ("hybrid 4 stages x 4-way DP",
+         "pipeline:stages=4,microbatches=16,dp=4"),
+        ("hybrid | AMP | DGC",
+         "pipeline:stages=4,microbatches=16,dp=4,amp,dgc:compression=0.01"),
+    ]
+    for name, spec in pipelines:
+        pred = pp.predict(spec)
+        print(f"{name:28s} {pred.speedup:9.2f}x "
+              f"({pred.predicted*1e3:.3f} ms on "
+              f"{len(pred.cluster.workers)} workers)")
+
+    # microbatch sweep: the stage partition is computed once and cached;
+    # each point only rebuilds the O(S*M) schedule graph
+    print("\nmicrobatch sweep (one partition, O(S*M) rebuilds per point):")
+    for pred in pp.sweep("pipeline",
+                         {"stages": [4], "microbatches": [4, 8, 16, 32]}):
+        print(f"  M={pred.point['microbatches']:3d}: "
+              f"{pred.predicted*1e3:9.3f} ms")
+
 
 if __name__ == "__main__":
     main()

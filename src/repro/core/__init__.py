@@ -30,11 +30,12 @@ per-worker :class:`SimResult` breakdown — see :mod:`repro.core.cluster`.
 
 from .task import (Task, TaskKind, HardwareSpec, TPU_V5E, HOST_THREAD,
                    DEVICE_STREAM, DATA_THREAD, DMA_CHANNEL, ici_channel,
-                   worker_thread, split_worker_thread)
+                   p2p_channel, worker_thread, split_worker_thread)
 from .graph import DependencyGraph, GraphError
 from .simulate import (simulate, simulate_reference, SimResult,
                        default_schedule, make_priority_schedule)
-from .cluster import ClusterGraph, ClusterResult, WorkerSpec
+from .cluster import (ClusterGraph, ClusterResult, WorkerSpec,
+                      match_collective_groups, match_push_pull_groups)
 from .transform import (GraphTransform, predicted_speedup, by_kind, by_name,
                         by_layer, by_phase, on_device, all_of, any_of)
 from .costmodel import CostModel, CollectiveModel, MeshTopology
@@ -42,20 +43,22 @@ from .hlo import parse_hlo_module, extract_graph, aggregate_costs, split_op_name
 from .layermap import LayerMap, LayerProfile, bucket_layers
 from .trace import (TraceBundle, trace_compiled, trace_measured,
                     measure_wallclock, lower_and_compile)
-from .optimize import (Optimization, OptimizationError, Prediction, Scenario,
-                       Stack, available, get_optimization, greedy_search,
-                       parse_stack, register)
+from .optimize import (Optimization, OptimizationError, PipelineParallel,
+                       Prediction, Scenario, Stack, available,
+                       get_optimization, greedy_search, parse_stack,
+                       register)
 from . import optimize
 from . import whatif
 
 __all__ = [
     "Task", "TaskKind", "HardwareSpec", "TPU_V5E",
     "HOST_THREAD", "DEVICE_STREAM", "DATA_THREAD", "DMA_CHANNEL", "ici_channel",
-    "worker_thread", "split_worker_thread",
+    "p2p_channel", "worker_thread", "split_worker_thread",
     "DependencyGraph", "GraphError",
     "simulate", "simulate_reference", "SimResult",
     "default_schedule", "make_priority_schedule",
     "ClusterGraph", "ClusterResult", "WorkerSpec",
+    "match_collective_groups", "match_push_pull_groups",
     "GraphTransform", "predicted_speedup",
     "by_kind", "by_name", "by_layer", "by_phase", "on_device", "all_of", "any_of",
     "CostModel", "CollectiveModel", "MeshTopology",
@@ -63,7 +66,8 @@ __all__ = [
     "LayerMap", "LayerProfile", "bucket_layers",
     "TraceBundle", "trace_compiled", "trace_measured", "measure_wallclock",
     "lower_and_compile",
-    "Optimization", "OptimizationError", "Prediction", "Scenario", "Stack",
+    "Optimization", "OptimizationError", "PipelineParallel", "Prediction",
+    "Scenario", "Stack",
     "available", "get_optimization", "greedy_search", "parse_stack",
     "register",
     "optimize", "whatif",

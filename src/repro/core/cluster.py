@@ -25,9 +25,7 @@ synchronization, then simulate it once.
   matched group is wired with the same mode-selected cross-worker structure.
   :meth:`ClusterGraph.from_traces` feeds it from real per-worker profiler
   traces via :mod:`repro.traceio` (Chrome trace-event JSON / native JSONL,
-  dPRO-style clock alignment).  P3-style unnamed push/pull pairs are only
-  synchronized on the replicate path (they need the base graph's structure
-  to pair pushes with pulls).
+  dPRO-style clock alignment).
 
 * Collectives become cross-worker structures, mode-selectable:
 
@@ -53,7 +51,20 @@ synchronization, then simulate it once.
 
   Point-to-point push/pull pairs (P3, parameter server) are synchronized at
   the aggregation boundary: every worker's push feeds a barrier that gates
-  every worker's pull.
+  every worker's pull.  Pairing works on both build paths: the replicate
+  path reads the shared base structure, the asymmetric trace path matches
+  unnamed push/pull pairs across worker graphs by (layer, occurrence)
+  (:func:`match_push_pull_groups`).
+
+* The comm-primitive layer is *scoped*: :meth:`ClusterGraph.wire_collective_group`
+  wires a matched collective over any subset of workers (``worker_ids``) —
+  how hybrid pipeline x data parallelism gets its per-stage DDP rings — and
+  :meth:`ClusterGraph.wire_p2p` wires a provenance-carrying point-to-point
+  leg (:class:`~repro.core.task.TaskKind` ``COMM``) between tasks on two
+  workers, its duration derived from the same link-bandwidth model as ring
+  legs (pods -> DCN, ``bandwidth_scale`` throttling) and retunable like
+  them.  :mod:`repro.parallel.plan` places pipeline stages with exactly
+  these two primitives.
 
 * :meth:`ClusterGraph.simulate` runs the event-driven engine
   (:func:`repro.core.simulate.simulate` — the O(E log V) heap engine makes
@@ -72,8 +83,8 @@ from .costmodel import CollectiveModel, CostModel
 from .graph import DependencyGraph, GraphError
 from .simulate import (ScheduleFn, SimResult, _host_device_breakdown,
                        simulate)
-from .task import (Task, TaskKind, HOST_THREAD, split_worker_thread,
-                   worker_thread)
+from .task import (Task, TaskKind, HOST_THREAD, p2p_channel,
+                   split_worker_thread, worker_thread)
 
 # Ring-decomposable collectives -> number of leg rounds as a multiple of (n-1).
 _RING_ROUNDS = {"all-reduce": 2, "reduce-scatter": 1, "all-gather": 1}
@@ -184,6 +195,65 @@ def match_collective_groups(graphs: Sequence[DependencyGraph]
     return groups
 
 
+def _is_unnamed_collective(t: Task) -> bool:
+    return t.kind == TaskKind.COLLECTIVE and not t.attrs.get("collective")
+
+
+def match_push_pull_groups(graphs: Sequence[DependencyGraph]
+                           ) -> List[List[Tuple[Task, List[Task]]]]:
+    """Match P3/parameter-server push->pull pairs across per-worker graphs.
+
+    A *push* is an unnamed point-to-point collective (``kind == COLLECTIVE``
+    with no ``attrs["collective"]`` group op) that has at least one
+    unnamed-collective child — its *pulls*.  Workers of a data-parallel job
+    run the same program, so the k-th push of a layer on each worker is the
+    same logical slice transfer: pushes are keyed by (layer, occurrence) in
+    sorted-lane scan order, the same discipline
+    :func:`match_collective_groups` uses for named collectives.  This is
+    what extends parameter-server synchronization to the asymmetric
+    trace-import path (:meth:`ClusterGraph.from_worker_graphs`), which used
+    to leave imported push/pull pairs unsynchronized.
+
+    Returns one group per matched key, in worker-0 scan order:
+    ``groups[k][w] == (push, pulls)`` for worker w.  Raises
+    :class:`~repro.core.graph.GraphError` when any worker is missing a pair
+    the others have — an inconsistent trace set cannot be synchronized.
+    """
+    per_worker: List[Dict[Tuple[Optional[str], int],
+                          Tuple[Task, List[Task]]]] = []
+    orders: List[List[Tuple[Optional[str], int]]] = []
+    for wg in graphs:
+        seen: Dict[Optional[str], int] = collections.defaultdict(int)
+        keyed: Dict[Tuple[Optional[str], int], Tuple[Task, List[Task]]] = {}
+        order: List[Tuple[Optional[str], int]] = []
+        for thread in sorted(wg.lanes):
+            for uid in wg.lanes[thread]:
+                t = wg.get(uid)
+                if not _is_unnamed_collective(t):
+                    continue
+                pulls = [v for v in wg.children(t)
+                         if _is_unnamed_collective(v)]
+                if not pulls:
+                    continue
+                key = (t.layer, seen[t.layer])
+                seen[t.layer] += 1
+                keyed[key] = (t, pulls)
+                order.append(key)
+        per_worker.append(keyed)
+        orders.append(order)
+    union = set().union(*(set(k) for k in per_worker)) if per_worker else set()
+    for i, keyed in enumerate(per_worker):
+        missing = union - set(keyed)
+        if missing:
+            names = sorted(f"{l or '?'}#{k}" for l, k in missing)[:5]
+            raise GraphError(
+                f"worker {i} is missing push/pull pair(s) present on other "
+                f"workers: {', '.join(names)}"
+                f"{' ...' if len(missing) > 5 else ''} — cannot pair "
+                f"parameter-server transfers across an inconsistent set")
+    return [[keyed[key] for keyed in per_worker] for key in orders[0]]
+
+
 @dataclasses.dataclass
 class ClusterResult:
     """Global simulation outcome plus the per-worker breakdown.
@@ -254,8 +324,7 @@ class ClusterGraph:
         replaced, per replica, by the cross-worker structure selected by
         ``collective_mode`` ("ring" | "hierarchical" | "fused").  This is
         the symmetric special case of :meth:`from_worker_graphs` — every
-        worker runs the same profile — plus parameter-server push/pull
-        synchronization, which needs the shared base structure.
+        worker runs the same profile.
         """
         specs = _as_specs(workers)
         cls._check_mode(collective_mode, specs)
@@ -274,7 +343,10 @@ class ClusterGraph:
                     members = [remap[c.uid] for remap in replicas]
                     cg._wire_group(c.attrs["collective"], members,
                                    collective_mode)
-            cg._link_push_pull(base, replicas)
+            cg._sync_push_pull(
+                [[(remap[push.uid], [remap[v.uid] for v in pulls])
+                  for remap in replicas]
+                 for ((push, pulls),) in match_push_pull_groups([base])])
         return cg._finish()
 
     @classmethod
@@ -293,7 +365,10 @@ class ClusterGraph:
         durations, gaps, and even task sets may differ.  Collectives are
         matched across workers by (name, occurrence)
         (:func:`match_collective_groups`) and wired with the mode-selected
-        cross-worker structure; everything else stays worker-local.
+        cross-worker structure; P3-style unnamed push/pull pairs are
+        matched by (layer, occurrence) (:func:`match_push_pull_groups`) and
+        synchronized at the aggregation barrier; everything else stays
+        worker-local.
 
         ``workers`` defaults to uniform specs (the traces already encode
         each worker's real speed); pass explicit :class:`WorkerSpec` lists
@@ -330,6 +405,10 @@ class ClusterGraph:
                 cg._wire_group(op, [remaps[i][m.uid]
                                     for i, m in enumerate(members)],
                                collective_mode)
+            cg._sync_push_pull(
+                [[(remaps[w][push.uid], [remaps[w][v.uid] for v in pulls])
+                  for w, (push, pulls) in enumerate(group)]
+                 for group in match_push_pull_groups(graphs)])
         return cg._finish()
 
     @classmethod
@@ -365,8 +444,18 @@ class ClusterGraph:
             _validate_hierarchical_pods(specs)
 
     def _clone_worker(self, i: int, spec: WorkerSpec,
-                      src: DependencyGraph) -> Dict[int, Task]:
-        """Clone ``src`` into the global graph as worker ``i``'s subgraph."""
+                      src: DependencyGraph, *,
+                      comm_prov: bool = True) -> Dict[int, Task]:
+        """Clone ``src`` into the global graph as worker ``i``'s subgraph.
+
+        ``comm_prov=False`` leaves :data:`TaskKind.COMM` tasks without a
+        provenance record (and unscaled): the caller is about to wire them
+        as point-to-point legs (:meth:`wire_p2p`), which derives their
+        duration from the actual placed link and records p2p provenance
+        itself.  The default treats a traced COMM task like a traced
+        collective — its duration throttles with the worker's
+        ``bandwidth_scale``.
+        """
         g = self.graph
         remap: Dict[int, Task] = {}
         for thread, lane in src.lanes.items():
@@ -374,11 +463,12 @@ class ClusterGraph:
                 t = src.get(uid)
                 nt = t.clone()
                 nt.thread = worker_thread(i, t.thread)
-                if t.kind == TaskKind.COLLECTIVE:
+                if t.kind == TaskKind.COLLECTIVE or (
+                        t.kind == TaskKind.COMM and comm_prov):
                     nt.duration = t.duration / max(spec.bandwidth_scale,
                                                    1e-12)
                     self._prov.append(("coll", nt, i, t.duration))
-                else:
+                elif t.kind != TaskKind.COMM:
                     nt.duration = t.duration * spec.compute_scale
                     nt.gap = t.gap * spec.compute_scale
                     self._prov.append(("compute", nt, i, t.duration, t.gap))
@@ -420,12 +510,22 @@ class ClusterGraph:
         # an astronomically slow link rather than a ZeroDivisionError
         return bw * max(min(wi.bandwidth_scale, wj.bandwidth_scale), 1e-12)
 
-    def _leg_duration(self, i: int, payload: float) -> float:
-        """One ring-leg's time for worker i — shared by build and retune so
-        a retuned sweep point is bit-identical to a fresh build."""
-        n = len(self.workers)
-        return ((payload / n) / self._link_bandwidth(i, (i + 1) % n)
+    def _leg_duration(self, ids: Tuple[int, ...], pos: int,
+                      payload: float) -> float:
+        """One ring-leg's time for the member at ``pos`` of the ring over
+        workers ``ids`` — shared by build and retune so a retuned sweep
+        point is bit-identical to a fresh build.  ``ids`` is the full
+        worker list for a global collective, or a subset (e.g. one pipeline
+        stage's data-parallel replicas)."""
+        k = len(ids)
+        return ((payload / k)
+                / self._link_bandwidth(ids[pos], ids[(pos + 1) % k])
                 + self.cost.collectives.hop_latency)
+
+    def _p2p_duration(self, i: int, j: int, payload: float) -> float:
+        """One point-to-point hop worker i -> worker j (build == retune)."""
+        return self.cost.collectives.p2p_time(payload,
+                                              self._link_bandwidth(i, j))
 
     def _detach(self, task: Task) -> Tuple[List[Task], List[Task]]:
         """Remove ``task`` keeping (parents, children) for re-wiring."""
@@ -443,33 +543,96 @@ class ClusterGraph:
     def _group_payload(members: Sequence[Task]) -> float:
         return max(max(m.comm_bytes for m in members), 0.0)
 
-    def _wire_group(self, op: str, members: List[Task], mode: str) -> None:
-        """Wire one matched collective (``members[i]`` = worker i's task)."""
+    def wire_collective_group(self, op: str, members: List[Task],
+                              worker_ids: Optional[Sequence[int]] = None,
+                              mode: Optional[str] = None) -> None:
+        """Wire one matched collective over a (sub)group of workers.
+
+        ``members[k]`` is the collective task of worker ``worker_ids[k]``
+        (default: the full worker list in order — the classic data-parallel
+        group).  Scoped groups are what hybrid parallelism is made of: a
+        pipeline stage's DDP ring is a collective over just that stage's
+        replicas, wired with exactly the same mode-selected structure as a
+        global all-reduce.
+        """
+        ids = tuple(worker_ids) if worker_ids is not None \
+            else tuple(range(len(self.workers)))
+        if len(ids) != len(members):
+            raise GraphError(
+                f"collective group has {len(members)} member task(s) but "
+                f"{len(ids)} worker id(s)")
+        mode = mode or self.collective_mode
         self._gid += 1
         if mode == "hierarchical" and op == "all-reduce":
             # BlueConnect decomposition is an all-reduce rewrite; a bare
             # reduce-scatter / all-gather is already single-stage and
             # keeps its ring legs
-            self._hierarchical_decompose(members)
+            self._hierarchical_decompose(members, ids)
         elif mode in ("ring", "hierarchical") and op in _RING_ROUNDS:
-            self._ring_decompose(op, members)
+            self._ring_decompose(op, members, ids)
         else:
             self._fused_sync(members)
 
-    def _ring_decompose(self, op: str, members: List[Task]) -> None:
-        """Per-worker ring legs with cross-worker pipeline edges.
+    def _wire_group(self, op: str, members: List[Task], mode: str) -> None:
+        """Wire one matched full-group collective (``members[i]`` = worker
+        i's task) — the unscoped form used by the build paths."""
+        self.wire_collective_group(op, members, mode=mode)
 
-        Leg round k of worker i waits on round k-1 of worker i-1 (the chunk it
-        is about to forward) and on its own round k-1 (channel serialization).
-        Per-worker totals telescope to ``group_time`` for uniform workers.
+    def wire_p2p(self, src: Task, dst: Task, src_worker: int,
+                 dst_worker: int, *, payload: Optional[float] = None,
+                 leg: Optional[Task] = None, name: str = "p2p") -> Task:
+        """Wire a point-to-point leg: ``src`` (on ``src_worker``) sends
+        ``payload`` bytes to ``dst`` (on ``dst_worker``).
+
+        The leg is a :data:`TaskKind.COMM` task on the sender's per-link
+        channel (:func:`~repro.core.task.p2p_channel` — consecutive sends
+        over one link serialize, exactly like ring legs on an ICI link);
+        its duration comes from :meth:`_link_bandwidth` (pods -> DCN,
+        ``bandwidth_scale`` throttling) plus the per-hop latency, and is
+        recorded in provenance so :meth:`retune` recomputes it like a ring
+        leg.  Pass ``leg`` to adopt an existing COMM task (e.g. a pipeline
+        stage template's hop, cloned by :meth:`_clone_worker` with
+        ``comm_prov=False``) instead of creating one; ``payload`` defaults
+        to the adopted leg's ``comm_bytes``.
+        """
+        i, j = src_worker, dst_worker
+        if payload is None:
+            payload = leg.comm_bytes if leg is not None else 0.0
+        if leg is None:
+            if src is None:
+                raise GraphError(
+                    "wire_p2p needs a src task (to create a leg) or an "
+                    "existing leg task to adopt")
+            leg = self.graph.add_task(
+                Task(name=f"{name}:w{i}>w{j}", kind=TaskKind.COMM,
+                     thread=worker_thread(i, p2p_channel(j)), duration=0.0,
+                     comm_bytes=payload, phase="comm",
+                     attrs={"p2p": (i, j)}), link_lane=False)
+            self.graph.add_edge(src, leg)
+        else:
+            leg.attrs["p2p"] = (i, j)
+        leg.duration = self._p2p_duration(i, j, payload)
+        self._prov.append(("p2p", leg, i, j, payload))
+        self.graph.add_edge(leg, dst)
+        return leg
+
+    def _ring_decompose(self, op: str, members: List[Task],
+                        ids: Tuple[int, ...]) -> None:
+        """Per-member ring legs with cross-worker pipeline edges.
+
+        Leg round k of the member at position p waits on round k-1 of ring
+        predecessor p-1 (the chunk it is about to forward) and on its own
+        round k-1 (channel serialization).  Per-worker totals telescope to
+        ``group_time`` for uniform workers.  ``ids[p]`` is the global
+        worker index of member p — the ring spans exactly those workers.
         """
         n = len(members)
         rounds = _RING_ROUNDS[op] * (n - 1)
         payload = self._group_payload(members)
         legs: List[List[Task]] = []
-        for i, rc in enumerate(members):
+        for pos, rc in enumerate(members):
             parents, children = self._detach(rc)
-            leg_dur = self._leg_duration(i, payload)
+            leg_dur = self._leg_duration(ids, pos, payload)
             worker_legs: List[Task] = []
             prev: Optional[Task] = None
             for k in range(rounds):
@@ -478,7 +641,7 @@ class ClusterGraph:
                 leg.duration = leg_dur
                 leg.comm_bytes = payload / n
                 leg.attrs = dict(rc.attrs, ring_round=k, coll_gid=self._gid)
-                self._prov.append(("ring", leg, i, payload))
+                self._prov.append(("ring", leg, ids, pos, payload))
                 self.graph.add_task(leg, link_lane=False)
                 for p in (parents if prev is None else [prev]):
                     self.graph.add_edge(p, leg)
@@ -491,7 +654,8 @@ class ClusterGraph:
             for k in range(1, rounds):
                 self.graph.add_edge(legs[(i - 1) % n][k - 1], legs[i][k])
 
-    def _hierarchical_decompose(self, members: List[Task]) -> None:
+    def _hierarchical_decompose(self, members: List[Task],
+                                ids: Tuple[int, ...]) -> None:
         """BlueConnect-style: pod-local reduce-scatter, cross-pod all-reduce
         among pod leaders over DCN, pod-local all-gather.
 
@@ -499,18 +663,23 @@ class ClusterGraph:
         gated on *every* pod's reduce-scatter finishing; the all-gather stage
         is gated on every leader's cross-pod leg.  Total per-worker time for
         uniform pods equals ``CollectiveModel.hierarchical_all_reduce``.
+        Scoped groups (``ids`` a subset) build the pod structure from the
+        group's workers only.
         """
         coll = self.cost.collectives
         payload = self._group_payload(members)
         cname = members[0].name
         pods: Dict[int, List[int]] = collections.defaultdict(list)
-        for i, w in enumerate(self.workers):
-            pods[w.pod].append(i)
+        member_pos = {w: pos for pos, w in enumerate(ids)}
+        for w in ids:
+            pods[self.workers[w].pod].append(w)
+        _validate_hierarchical_pods([self.workers[w] for w in ids])
         pod_ids = sorted(pods)
         num_pods = len(pod_ids)
 
-        bounds = [self._detach(m) for m in members]
+        bounds = {w: self._detach(members[member_pos[w]]) for w in ids}
 
+        proto = {w: members[member_pos[w]] for w in ids}
         leaders_bar = self._barrier(f"{cname}:leaders-barrier")
         for p in pod_ids:
             pod_members = tuple(pods[p])
@@ -524,7 +693,7 @@ class ClusterGraph:
                 parents, _ = bounds[i]
                 for par in parents:
                     self.graph.add_edge(par, bar)
-                rs = self._add_comm(i, members[i], f"pod{p}:reduce-scatter",
+                rs = self._add_comm(i, proto[i], f"pod{p}:reduce-scatter",
                                     rs_dur, payload)
                 self._prov.append(("hrs", rs, pod_members, payload))
                 self.graph.add_edge(bar, rs)
@@ -541,7 +710,7 @@ class ClusterGraph:
                 cross_dur = coll.axis_time("all-reduce", shard, num_pods,
                                            "dcn")
                 cross_dur /= max(self.workers[leader].bandwidth_scale, 1e-12)
-                cross = self._add_comm(leader, members[leader],
+                cross = self._add_comm(leader, proto[leader],
                                        f"pod{p}:cross-all-reduce",
                                        cross_dur, shard)
                 self._prov.append(("hcross", cross, leader, shard, num_pods))
@@ -551,10 +720,10 @@ class ClusterGraph:
         else:
             gate = leaders_bar
         for p in pod_ids:
-            self._pod_all_gather(members, coll, payload, p, pods[p], gate,
+            self._pod_all_gather(proto, coll, payload, p, pods[p], gate,
                                  bounds)
 
-    def _pod_all_gather(self, members: List[Task], coll: CollectiveModel,
+    def _pod_all_gather(self, proto: Dict[int, Task], coll: CollectiveModel,
                         payload: float, p: int, pod_members: List[int],
                         gate: Task, bounds) -> None:
         m = len(pod_members)
@@ -562,7 +731,7 @@ class ClusterGraph:
         ag_dur = coll.axis_time("all-gather", payload, m, "ici")
         ag_dur /= max(scale, 1e-12)
         for i in pod_members:
-            ag = self._add_comm(i, members[i], f"pod{p}:all-gather", ag_dur,
+            ag = self._add_comm(i, proto[i], f"pod{p}:all-gather", ag_dur,
                                 payload)
             self._prov.append(("hag", ag, tuple(pod_members), payload))
             self.graph.add_edge(gate, ag)
@@ -588,28 +757,23 @@ class ClusterGraph:
                 self.graph.add_edge(p, bar)
             self.graph.add_edge(bar, rc)
 
-    def _link_push_pull(self, base: DependencyGraph,
-                        replicas: List[Dict[int, Task]]) -> None:
+    def _sync_push_pull(self, groups: List[List[Tuple[Task, List[Task]]]]
+                        ) -> None:
         """Parameter-server semantics for P3-style push/pull pairs.
 
-        A pull returns the *aggregated* value, so every worker's pull of a
-        slice waits (via one barrier per push task) for every worker's push of
+        ``groups[k][w]`` is worker w's ``(push, pulls)`` for the k-th
+        matched pair, already remapped into the global graph.  A pull
+        returns the *aggregated* value, so every worker's pull of a slice
+        waits (via one barrier per matched push) for every worker's push of
         that slice.  Pushes themselves stay local — that preserves P3's
         overlap of early pushes with the tail of backprop.
         """
-        for u in base.tasks():
-            if u.kind != TaskKind.COLLECTIVE or u.attrs.get("collective"):
-                continue
-            pulls = [v for v in base.children(u)
-                     if v.kind == TaskKind.COLLECTIVE
-                     and not v.attrs.get("collective")]
-            if not pulls:
-                continue
-            bar = self._barrier(f"{u.name}:aggregate")
-            for remap in replicas:
-                self.graph.add_edge(remap[u.uid], bar)
+        for group in groups:
+            bar = self._barrier(f"{group[0][0].name}:aggregate")
+            for push, pulls in group:
+                self.graph.add_edge(push, bar)
                 for v in pulls:
-                    self.graph.add_edge(bar, remap[v.uid])
+                    self.graph.add_edge(bar, v)
 
     # --------------------------------------------------------------- retune
     @property
@@ -665,7 +829,7 @@ class ClusterGraph:
                 "instead")
         self.workers = specs
         coll = self.cost.collectives
-        leg_dur: Dict[Tuple[int, float], float] = {}   # (worker, payload)
+        leg_dur: Dict[Tuple, float] = {}   # (ids, pos, payload)
         for rec in self._prov:
             kind, t = rec[0], rec[1]
             if kind == "compute":
@@ -676,12 +840,15 @@ class ClusterGraph:
                 _, _, i, dur = rec
                 t.duration = dur / max(specs[i].bandwidth_scale, 1e-12)
             elif kind == "ring":
-                _, _, i, payload = rec
-                key = (i, payload)
+                _, _, ids, pos, payload = rec
+                key = (ids, pos, payload)
                 d = leg_dur.get(key)
                 if d is None:
-                    d = leg_dur[key] = self._leg_duration(i, payload)
+                    d = leg_dur[key] = self._leg_duration(ids, pos, payload)
                 t.duration = d
+            elif kind == "p2p":
+                _, _, i, j, payload = rec
+                t.duration = self._p2p_duration(i, j, payload)
             elif kind in ("hrs", "hag"):
                 _, _, pod_members, payload = rec
                 op = "reduce-scatter" if kind == "hrs" else "all-gather"

@@ -105,6 +105,19 @@ class CollectiveModel:
             return payload_bytes / bw + self.hop_latency
         raise ValueError(f"unknown collective {op!r}")
 
+    def p2p_time(self, payload_bytes: float, bandwidth: float) -> float:
+        """One point-to-point hop over a link of ``bandwidth`` bytes/s.
+
+        The primitive under both ring legs and pipeline-parallel
+        activation/gradient hops: payload transfer plus the per-hop
+        link/switch latency.  Zero payload is a pure synchronization edge
+        and costs nothing (matching :meth:`axis_time`'s empty-collective
+        contract).
+        """
+        if payload_bytes <= 0:
+            return 0.0
+        return payload_bytes / bandwidth + self.hop_latency
+
     def group_time(self, op: str, payload_bytes: float, group_size: int,
                    crosses_pod: bool = False) -> float:
         """Time for one collective over an opaque replica group.

@@ -50,8 +50,21 @@ Paper-algorithm -> registered-name map (Algorithms 3-12, §5 + Appendix A):
     beyond  straggler                ``straggler``
     beyond  bandwidth scaling        ``bandwidth``
     beyond  gradient accumulation    ``grad_accum``
+    beyond  pipeline / hybrid PPxDP  ``pipeline`` / ``pp``
     beyond  identity / baseline      ``noop``
     ======  =======================  ===============================
+
+``pipeline`` is a *placement*, not a graph rewrite: the scenario's profile
+is partitioned into stages (:mod:`repro.parallel.plan`) and placed onto
+``stages * dp`` workers through the real cluster simulator.  In a stack,
+optimizations *before* ``pipeline`` transform the single-worker profile
+(so the partition sees their effect); optimizations *after* it transform
+each stage's schedule template (so ``pipeline|amp|dgc`` speeds stage
+compute, shrinks hop payloads, and compresses the per-stage gradient
+rings) before the plan wires the global graph.  A pre-stack that *inserts*
+communication (``ddp|pipeline``, ``zero|pipeline``) is rejected loudly —
+the compute-only partition would silently drop it; use ``pipeline:dp=N``
+for data parallelism.
 
 Scenarios built from *real traces* (``Scenario(trace_dir=...)`` — see
 :mod:`repro.traceio`) run every registered optimization on the imported
@@ -162,6 +175,12 @@ class Scenario:
 
     _baseline: Optional[SimResult] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
+    # stage-partition cache for the pipeline route: (pre-stack spec, stages)
+    # -> StageProfile tuple.  Partitioning scans the whole profile (O(V));
+    # microbatch/schedule sweep points reuse it and rebuild only the
+    # O(S*M) schedule graph.
+    _plan_cache: Dict[Any, Any] = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False)
 
     def __post_init__(self) -> None:
         if self.cost is None:
@@ -264,10 +283,15 @@ class Scenario:
 
     def _evaluate(self, opt: "Optimization", *,
                   baseline: Optional[float] = None,
-                  point: Optional[Dict[str, Any]] = None
+                  point: Optional[Dict[str, Any]] = None,
+                  reuse: bool = True
                   ) -> Tuple["Prediction", GraphTransform,
                              Optional[ClusterGraph]]:
         base = self.baseline().makespan if baseline is None else baseline
+        pre, pipe, post = _split_pipeline(opt)
+        if pipe is not None:
+            return self._evaluate_pipeline(opt, pre, pipe, post, base,
+                                           point or {}, reuse)
         if self.traces is not None:
             # trace route: the optimization transforms *each* worker's own
             # graph (workers run the same program, so the same rewrite
@@ -294,6 +318,91 @@ class Scenario:
         res = tf.simulate()
         return Prediction(opt, base, res.makespan, res, None, point or {}), \
             tf, None
+
+    # ------------------------------------------------------ pipeline route
+    def _evaluate_pipeline(self, opt: "Optimization",
+                           pre: Optional["Optimization"],
+                           pipe: "PipelineParallel",
+                           post: Optional["Optimization"], base: float,
+                           point: Dict[str, Any], reuse: bool
+                           ) -> Tuple["Prediction", GraphTransform,
+                                      Optional[ClusterGraph]]:
+        """Place a pipeline/hybrid plan and simulate it on the cluster path.
+
+        Stack semantics: ``pre`` (everything left of ``pipeline``)
+        transforms the single-worker profile before partitioning; ``post``
+        (everything right of it) transforms each stage's schedule template
+        before placement — so AMP shrinks hop payloads and DGC compresses
+        the per-stage gradient rings.  The stage partition is cached per
+        (pre-stack, stages) so microbatch/schedule sweep points skip the
+        O(V) profile scan (``reuse=False`` bypasses the cache).
+        """
+        from repro.parallel.plan import ParallelPlan, partition_stages
+        if self.traces is not None:
+            raise OptimizationError(
+                "pipeline placement re-partitions a single-worker profile; "
+                "it is not supported on the trace route")
+        key = (pre.spec() if pre is not None else "", pipe.stages)
+        profiles = self._plan_cache.get(key) if reuse else None
+        tf: Optional[GraphTransform] = None
+        if profiles is None:
+            tf = pre.apply(self) if pre is not None else self.transform()
+            if pre is not None and \
+                    _num_comm_tasks(tf.graph) > _num_comm_tasks(self.graph):
+                # the partition places compute only; silently dropping
+                # comm the pre-stack just inserted would make ddp|pipeline
+                # a no-op that *looks* faster (greedy_search would pick it)
+                raise OptimizationError(
+                    f"optimization(s) before 'pipeline' insert "
+                    f"communication tasks ({pre.spec()}) that the stage "
+                    f"partition would drop; express data parallelism with "
+                    f"pipeline:dp=N and stack communication what-ifs "
+                    f"*after* the placement instead")
+            profiles = tuple(partition_stages(
+                tf.graph, pipe.stages,
+                activation_bytes=self.activation_bytes,
+                layer_grad_bytes=self.layer_grad_bytes))
+            if reuse:
+                self._plan_cache[key] = profiles
+        plan = ParallelPlan(profiles, pipe.microbatches, pipe.schedule,
+                            pipe.dp)
+        templates = plan.stage_templates(self.cost)
+        sched_fn = None
+        if post is not None:
+            stfs = [GraphTransform(tmpl, copy=False) for tmpl in templates]
+            for stf in stfs:
+                post.build(self, stf)
+            sched_fn = next((stf.schedule for stf in stfs
+                             if stf.schedule is not None), None)
+        cg = plan.place(self._pipeline_specs(plan), cost=self.cost,
+                        collective_mode=self.collective_mode,
+                        sched_fn=sched_fn, templates=templates)
+        cres = cg.simulate()
+        out_tf = tf if tf is not None \
+            else GraphTransform(templates[0], copy=False)
+        return (Prediction(opt, base, cres.makespan, cres.global_result,
+                           cres, dict(point)), out_tf, cg)
+
+    def _pipeline_specs(self, plan: Any) -> List[WorkerSpec]:
+        """Worker specs for a plan: the scenario's list must pair 1:1 with
+        the (stage, replica) slots; an int spec must be 1 (default) or the
+        plan's worker count; otherwise uniform workers."""
+        n = plan.num_workers
+        if isinstance(self.workers, int):
+            if self.workers not in (1, n):
+                raise OptimizationError(
+                    f"pipeline places {plan.num_stages} stage(s) x "
+                    f"{plan.dp} replica(s) = {n} worker(s), but the "
+                    f"scenario pins workers={self.workers}; leave workers "
+                    f"unset or pass one WorkerSpec per slot")
+            return [WorkerSpec() for _ in range(n)]
+        specs = list(self.workers)
+        if len(specs) != n:
+            raise OptimizationError(
+                f"pipeline places {n} worker(s) (stage-major: worker = "
+                f"stage*dp + replica) but the scenario has "
+                f"{len(specs)} WorkerSpec(s)")
+        return specs
 
     # --------------------------------------------------------------- sweep
     def sweep(self, opt: Union[str, "Optimization"],
@@ -355,7 +464,7 @@ class Scenario:
                 cache["opt"] = popt
             if pred is None:
                 pred, tf, cg = scn._evaluate(popt, baseline=base,
-                                             point=dict(pt))
+                                             point=dict(pt), reuse=reuse)
                 if reuse:
                     cache.update(opt=popt, scn=scn, tf=tf, cg=cg)
             preds.append(pred)
@@ -570,24 +679,38 @@ def _coerce(value: Any, hint: Any) -> Any:
 def parse_stack(spec: str) -> Tuple[Optimization, Dict[str, Any]]:
     """Parse a CLI stack spec like ``"amp,ddp:workers=16,zero"``.
 
-    Comma-separated optimizations, colon-separated ``param=value`` pairs
-    parsed against the registry (typed via each optimization's dataclass
-    fields).  Keys that are :class:`Scenario` fields (``workers``,
+    Comma-separated optimizations, ``param=value`` pairs parsed against the
+    registry (typed via each optimization's dataclass fields).  Parameters
+    attach with colons (``ddp:bucket_bytes=1e6``) or as comma-separated
+    continuations of the preceding optimization
+    (``pipeline:stages=4,microbatches=16,schedule=1f1b`` — a comma part
+    whose head is ``name=value`` extends the optimization to its left).
+    Keys that are :class:`Scenario` fields (``workers``,
     ``collective_mode``) are collected into the returned override dict
     instead.  Returns ``(optimization_or_stack, scenario_overrides)``.
     """
-    opts: List[Optimization] = []
+    pending: List[Tuple[type, Dict[str, Any], str]] = []
     overrides: Dict[str, Any] = {}
     for part in _split_outside(spec, ","):
         fields = _split_outside(part, ":")
-        name, kvs = fields[0], fields[1:]
-        cls = get_optimization(name)
+        if "=" in fields[0]:
+            # continuation: the whole part parameterizes the previous opt
+            if not pending:
+                raise OptimizationError(
+                    f"parameter {fields[0]!r} appears before any "
+                    f"optimization name in {spec!r}")
+            cls, params, _ = pending[-1]
+            kvs = fields
+        else:
+            cls = get_optimization(fields[0])
+            params = {}
+            pending.append((cls, params, part))
+            kvs = fields[1:]
         try:
             hints = typing.get_type_hints(cls)
         except Exception:
             hints = {}
         valid = {f.name for f in dataclasses.fields(cls)}
-        params: Dict[str, Any] = {}
         for kv in kvs:
             if "=" not in kv:
                 raise OptimizationError(
@@ -603,6 +726,8 @@ def parse_stack(spec: str) -> Tuple[Optimization, Dict[str, Any]]:
                     f"{cls.name} has no parameter {k!r}; valid: "
                     f"{sorted(valid)} (or scenario overrides "
                     f"{list(_SCENARIO_OVERRIDES)})")
+    opts: List[Optimization] = []
+    for cls, params, part in pending:
         try:
             opts.append(cls(**params))
         except TypeError as e:
@@ -702,16 +827,37 @@ class AMP(Optimization):
     matmul_speedup: float = 3.0
     memory_speedup: float = 2.0
 
-    def build(self, s: Scenario, tf: GraphTransform) -> None:
-        for t in tf.select(on_device):
-            if t.kind == TaskKind.COLLECTIVE:
-                t.duration /= self.memory_speedup   # payload bits halve too
-                t.comm_bytes /= self.memory_speedup
+    @staticmethod
+    def _targets(tf: GraphTransform) -> List[Task]:
+        # device tasks plus point-to-point COMM legs anywhere (pipeline
+        # activation/gradient hops: halved precision halves the payload)
+        return tf.select(lambda t: on_device(t) or t.kind == TaskKind.COMM)
+
+    def _rescale(self, tf: GraphTransform, matmul: float,
+                 memory: float) -> None:
+        """Divide durations by the per-class factors (build == factor,
+        retune == new/old ratio; classification is duration-independent,
+        so re-applying with a ratio is exact re-parameterization)."""
+        for t in self._targets(tf):
+            if t.is_comm():
+                t.duration /= memory   # payload bits halve too
+                t.comm_bytes /= memory
             elif t.attrs.get("opcode") in ("dot", "convolution") or (
                     t.kind == TaskKind.COMPUTE and t.flops > t.bytes_accessed):
-                t.duration /= self.matmul_speedup
+                t.duration /= matmul
             else:
-                t.duration /= self.memory_speedup
+                t.duration /= memory
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        self._rescale(tf, self.matmul_speedup, self.memory_speedup)
+
+    def retune(self, s: Scenario, tf: GraphTransform,
+               old: "Optimization") -> bool:
+        if old.matmul_speedup == 0 or old.memory_speedup == 0:
+            return False
+        self._rescale(tf, self.matmul_speedup / old.matmul_speedup,
+                      self.memory_speedup / old.memory_speedup)
+        return True
 
 
 @register("fused_optimizer", "fusedadam", algorithm="Alg 4")
@@ -1115,10 +1261,42 @@ class Gist(Optimization):
 class DGC(Optimization):
     """Paper Algorithm 12 (Deep Gradient Compression): scale every gradient
     collective's payload by ``compression`` and insert compress/decompress
-    device tasks around it."""
+    device tasks around it.
+
+    Re-parameterizable in place (:meth:`retune`): a ``Scenario.sweep`` grid
+    over ``compression`` / ``codec_flops_per_byte`` rescales the applied
+    transform instead of rebuilding per point.
+    """
 
     compression: float = 0.01
     codec_flops_per_byte: float = 4.0
+
+    _TARGET_OPS = ("all-reduce", "reduce-scatter")
+
+    def retune(self, s: Scenario, tf: GraphTransform,
+               old: "Optimization") -> bool:
+        if old.compression == 0:
+            return False
+        cost = s.cost
+        colls = {t.name: t for t in tf.select(
+            lambda t: t.kind == TaskKind.COLLECTIVE and
+            t.attrs.get("collective") in self._TARGET_OPS)}
+        base = {name: u.comm_bytes / old.compression
+                for name, u in colls.items()}
+        for t in tf.select(lambda t: t.name.startswith("dgc-")):
+            role, _, cname = t.name.partition(":")
+            payload = base.get(cname)
+            if payload is None:
+                return False          # structure drifted: rebuild the point
+            t.flops = payload * self.codec_flops_per_byte
+            out = 2 * payload if role == "dgc-compress" \
+                else 2 * payload * self.compression
+            t.bytes_accessed = out
+            t.duration = cost.compute_time(t.flops, out)
+        for name, u in colls.items():
+            u.comm_bytes = base[name] * self.compression
+            u.duration = u.duration / old.compression * self.compression
+        return True
 
     def build(self, s: Scenario, tf: GraphTransform) -> None:
         cost = s.cost
@@ -1288,19 +1466,23 @@ class Straggler(Optimization):
 @register("bandwidth", algorithm="beyond-paper")
 @dataclasses.dataclass(frozen=True)
 class Bandwidth(Optimization):
-    """Paper Fig. 2 example: 'what if network bandwidth is N x'."""
+    """Paper Fig. 2 example: 'what if network bandwidth is N x'.
+
+    Scales every communication task — group collectives *and* point-to-
+    point COMM legs (pipeline activation/gradient hops), which the old
+    trailing-gap hop model hid from this what-if.
+    """
 
     factor: float = 1.0
 
     def build(self, s: Scenario, tf: GraphTransform) -> None:
-        tf.scale(lambda t: t.kind == TaskKind.COLLECTIVE, 1.0 / self.factor)
+        tf.scale(lambda t: t.is_comm(), 1.0 / self.factor)
 
     def retune(self, s: Scenario, tf: GraphTransform,
                old: "Optimization") -> bool:
         if old.factor == 0:
             return False
-        tf.scale(lambda t: t.kind == TaskKind.COLLECTIVE,
-                 old.factor / self.factor)
+        tf.scale(lambda t: t.is_comm(), old.factor / self.factor)
         return True
 
 
@@ -1317,6 +1499,81 @@ class GradAccum(Optimization):
                  float(self.microbatches))
         tf.scale(all_of(on_device, by_phase("bwd")),
                  float(self.microbatches))
+
+
+@register("pipeline", "pp", algorithm="beyond-paper")
+@dataclasses.dataclass(frozen=True)
+class PipelineParallel(Optimization):
+    """Pipeline / hybrid parallelism as a *placement* through the real
+    cluster simulator (GPipe / 1F1B; see :mod:`repro.parallel.plan`).
+
+    The scenario's profile is partitioned by layer into ``stages`` balanced
+    stage profiles, scheduled over ``microbatches``, replicated ``dp`` ways
+    per stage (hybrid PP x DP: per-stage gradient rings over each stage's
+    replicas), and placed onto ``stages * dp`` workers (stage-major; the
+    scenario's WorkerSpec list — pods, stragglers, skewed links — maps
+    1:1 onto the slots).  Cross-stage activation/gradient hops are
+    point-to-point COMM legs whose duration follows the placed link (DCN
+    across pods) and retunes in sweeps like ring legs.
+
+    Unlike every other registered optimization this is not a graph rewrite
+    — :meth:`Scenario.predict` evaluates it on the cluster route directly,
+    splitting a stack at the pipeline element (see the module docstring
+    for the pre/post composition semantics).
+    """
+
+    stages: int = 2
+    microbatches: int = 8
+    schedule: str = "gpipe"
+    dp: int = 1
+
+    def __post_init__(self) -> None:
+        if self.stages < 1 or self.microbatches < 1 or self.dp < 1:
+            raise OptimizationError(
+                f"pipeline needs stages/microbatches/dp >= 1, got "
+                f"{self.spec()}")
+        from repro.parallel.plan import SCHEDULES
+        if self.schedule not in SCHEDULES:
+            raise OptimizationError(
+                f"pipeline schedule must be one of {SCHEDULES}, got "
+                f"{self.schedule!r}")
+
+    def build(self, s: Scenario, tf: GraphTransform) -> None:
+        raise OptimizationError(
+            "pipeline is a placement, not a graph transform; evaluate it "
+            "via Scenario.predict/evaluate/sweep (not supported on the "
+            "trace route)")
+
+
+def _num_comm_tasks(graph: DependencyGraph) -> int:
+    return sum(1 for t in graph.tasks()
+               if t.kind in (TaskKind.COLLECTIVE, TaskKind.COMM))
+
+
+def _split_pipeline(opt: Optimization
+                    ) -> Tuple[Optional[Optimization],
+                               Optional["PipelineParallel"],
+                               Optional[Optimization]]:
+    """Split a stack at its pipeline element: (pre, pipeline, post).
+
+    ``(None, None, None)`` when the stack has no pipeline placement; raises
+    when it has more than one (a graph can only be placed once).
+    """
+    if isinstance(opt, PipelineParallel):
+        return None, opt, None
+    if not isinstance(opt, Stack):
+        return None, None, None
+    idx = [i for i, o in enumerate(opt.opts)
+           if isinstance(o, PipelineParallel)]
+    if not idx:
+        return None, None, None
+    if len(idx) > 1:
+        raise OptimizationError(
+            "a stack can contain at most one pipeline placement")
+    i = idx[0]
+    pre = Stack(*opt.opts[:i]) if opt.opts[:i] else None
+    post = Stack(*opt.opts[i + 1:]) if opt.opts[i + 1:] else None
+    return pre, opt.opts[i], post
 
 
 # ================================================================= search

@@ -29,6 +29,7 @@ class TaskKind(enum.Enum):
     COMPUTE = "compute"            # dots / convolutions / fusions on the device stream
     MEMORY = "memory"              # copies, transposes, dynamic-update-slice, bitcasts
     COLLECTIVE = "collective"      # all-reduce / all-gather / reduce-scatter / all-to-all / permute
+    COMM = "comm"                  # point-to-point send/recv legs (pipeline hops, ppermute)
     HOST = "host"                  # host-side dispatch, callbacks, optimizer driver logic
     DATA = "data"                  # data loading (one task per micro/mini-batch)
     SYNC = "sync"                  # device->host completion events / blocking copies
@@ -45,6 +46,17 @@ DMA_CHANNEL = "dma"
 def ici_channel(axis: str) -> str:
     """Communication channel resource for a mesh axis (e.g. ``ici:data``)."""
     return f"ici:{axis}"
+
+
+def p2p_channel(dst: int) -> str:
+    """Channel resource of the point-to-point link *towards* worker ``dst``.
+
+    Pipeline-parallel activation/gradient hops serialize per link: every
+    send from one worker to the same destination shares this channel, so
+    back-to-back microbatch hops queue exactly like ring legs on an ICI
+    link do.
+    """
+    return f"ici:p2p>w{dst}"
 
 
 def _json_safe(v: Any) -> bool:
@@ -112,6 +124,14 @@ class Task:
 
     def is_collective(self) -> bool:
         return self.kind == TaskKind.COLLECTIVE
+
+    def is_comm(self) -> bool:
+        """Any communication task: group collective or point-to-point leg.
+
+        Bandwidth-style what-ifs act on this superset — a pipeline hop is as
+        much network traffic as an all-reduce leg.
+        """
+        return self.kind in (TaskKind.COLLECTIVE, TaskKind.COMM)
 
     # ------------------------------------------------------- trace records
     def to_record(self) -> Dict[str, Any]:

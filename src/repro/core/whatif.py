@@ -31,8 +31,8 @@ from .graph import DependencyGraph
 from .optimize import (AMP, DDP, DGC, P3, Bandwidth, BlueConnect,
                        FusedNorm, FusedOptimizer, Gist, GradAccum,
                        GRAD_CHANNEL, Offload, OverlapCollectives,
-                       RemoveLayer, ScaleLayer, Scenario, Stack, Straggler,
-                       ZeRO, extend_next_forward)
+                       PipelineParallel, RemoveLayer, ScaleLayer, Scenario,
+                       Stack, Straggler, ZeRO, extend_next_forward)
 from .transform import GraphTransform
 
 _worker_specs = _as_specs       # int N or explicit WorkerSpec list, validated
@@ -47,7 +47,7 @@ __all__ = [
     "what_if_grad_accum",
     "cluster_what_if_distributed", "cluster_what_if_zero",
     "cluster_what_if_p3", "cluster_what_if_straggler",
-    "cluster_what_if_bandwidth",
+    "cluster_what_if_bandwidth", "cluster_what_if_pipeline",
 ]
 
 
@@ -271,6 +271,34 @@ def cluster_what_if_straggler(graph: DependencyGraph,
     return cluster_what_if_distributed(graph, layer_grad_bytes, specs,
                                        cost=cost,
                                        collective_mode=collective_mode)
+
+
+def cluster_what_if_pipeline(graph: DependencyGraph,
+                             stages: int, microbatches: int, *,
+                             schedule: str = "gpipe", dp: int = 1,
+                             workers=None,
+                             activation_bytes: Optional[Dict[str, float]]
+                             = None,
+                             layer_grad_bytes: Optional[Dict[str, float]]
+                             = None,
+                             cost: Optional[CostModel] = None,
+                             collective_mode: str = "ring") -> ClusterResult:
+    """Pipeline / hybrid PP x DP placement simulated on the global graph.
+
+    Partitions ``graph`` by layer into ``stages`` balanced stages, runs the
+    GPipe or 1F1B microbatch schedule on ``stages * dp`` workers with
+    point-to-point activation/gradient hops and per-stage gradient rings —
+    see :class:`repro.core.optimize.PipelineParallel` and
+    :mod:`repro.parallel.plan`.  ``workers`` (optional WorkerSpec list,
+    stage-major) places stages on heterogeneous pods/stragglers.
+    """
+    s = Scenario(graph, cost=cost, layer_grad_bytes=layer_grad_bytes,
+                 activation_bytes=activation_bytes,
+                 workers=workers if workers is not None else 1,
+                 collective_mode=collective_mode)
+    return s.predict(PipelineParallel(stages=stages,
+                                      microbatches=microbatches,
+                                      schedule=schedule, dp=dp)).cluster
 
 
 def cluster_what_if_bandwidth(graph: DependencyGraph,

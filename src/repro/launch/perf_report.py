@@ -203,6 +203,15 @@ def export_prediction(pred, tf, cg, dest: str) -> str:
     from repro import traceio
     if cg is not None:
         paths = traceio.export_cluster_traces(cg, pred.cluster, dest)
+        if any(t.kind == TaskKind.COMM for t in cg.graph.tasks()):
+            # pipeline placements: the per-worker export keeps every hop
+            # leg's timeline, but the importer only re-wires *collectives*
+            # (matched by name across workers) — point-to-point cross-stage
+            # coupling cannot round-trip, so don't advertise it
+            return (f"exported {len(paths)} per-worker Chrome traces to "
+                    f"{dest}/ (open in https://ui.perfetto.dev; NOTE: "
+                    f"point-to-point pipeline hops do not survive "
+                    f"--trace-dir re-import — timelines only)")
         return (f"exported {len(paths)} per-worker Chrome traces to "
                 f"{dest}/ (open in https://ui.perfetto.dev; re-import with "
                 f"--trace-dir)")
@@ -322,8 +331,11 @@ def main() -> None:
                     help="IDX:SLOWDOWN, e.g. 0:2.0 (with --cluster)")
     ap.add_argument("--what-if", default="", dest="what_if",
                     help="registry-parsed optimization stack, e.g. "
-                         "'amp,ddp:workers=16,zero' (see repro.core.optimize;"
-                         " combine with --cluster for per-worker breakdown)")
+                         "'amp,ddp:workers=16,zero' or "
+                         "'pipeline:stages=4,microbatches=16,schedule=1f1b'"
+                         " (see repro.core.optimize; combine with --cluster"
+                         " for per-worker breakdown; pipeline placements"
+                         " always report per-stage workers)")
     ap.add_argument("--trace-dir", default="", dest="trace_dir",
                     help="import per-worker profiler traces (Chrome JSON / "
                          "native JSONL, one file per worker) instead of "

@@ -1,3 +1,7 @@
 from .pipeline import gpipe_spmd, pipeline_graph, gpipe_bubble_fraction
+from .plan import (ParallelPlan, StageProfile, partition_stages,
+                   schedule_order, SCHEDULES)
 
-__all__ = ["gpipe_spmd", "pipeline_graph", "gpipe_bubble_fraction"]
+__all__ = ["gpipe_spmd", "pipeline_graph", "gpipe_bubble_fraction",
+           "ParallelPlan", "StageProfile", "partition_stages",
+           "schedule_order", "SCHEDULES"]

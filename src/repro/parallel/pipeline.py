@@ -15,23 +15,26 @@ Two pieces:
   closed form for balanced stages — makespan = (M + S - 1) * t_stage — is
   asserted against the simulator in tests/test_pipeline.py, a nice
   independent validation of paper Algorithm 1 on a known schedule.
+  Rebuilt (PR 4) on :mod:`repro.parallel.plan`'s scheduling core: fwd+bwd
+  schedules (GPipe / 1F1B) and real COMM hop tasks.  For placement onto
+  actual workers — per-stage WorkerSpecs, DCN-aware retunable hops, hybrid
+  PP x DP — use :class:`repro.parallel.plan.ParallelPlan`; the registered
+  ``pipeline`` optimization (:mod:`repro.core.optimize`) is the what-if
+  surface.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Sequence
-
-import jax
-import jax.numpy as jnp
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core.graph import DependencyGraph
 from repro.core.task import Task, TaskKind
 
 
 # ------------------------------------------------------------- SPMD GPipe
-def gpipe_spmd(stage_fn: Callable[[jax.Array], jax.Array],
-               x_microbatches: jax.Array, *, n_microbatches: int,
-               axis_name: str = "stage") -> jax.Array:
+def gpipe_spmd(stage_fn: Callable[[Any], Any],
+               x_microbatches: Any, *, n_microbatches: int,
+               axis_name: str = "stage") -> Any:
     """Run a GPipe wavefront inside ``shard_map`` over ``axis_name``.
 
     ``stage_fn`` is this device's stage (parameters closed over, already
@@ -40,6 +43,8 @@ def gpipe_spmd(stage_fn: Callable[[jax.Array], jax.Array],
     outputs as produced by the LAST stage (valid on every device for
     simplicity; callers slice).
     """
+    import jax
+    import jax.numpy as jnp
     S = jax.lax.psum(1, axis_name)
     sid = jax.lax.axis_index(axis_name)
     M = n_microbatches
@@ -79,24 +84,78 @@ def gpipe_spmd(stage_fn: Callable[[jax.Array], jax.Array],
 
 # --------------------------------------------------------- Daydream model
 def pipeline_graph(stage_times_s: Sequence[float], n_microbatches: int,
-                   hop_time_s: float = 0.0) -> DependencyGraph:
-    """GPipe schedule as a Daydream graph: lanes = stages, edges = deps.
+                   hop_time_s: float = 0.0, *,
+                   bwd_stage_times_s: Optional[Sequence[float]] = None,
+                   schedule: str = "gpipe",
+                   hop_bytes: float = 0.0) -> DependencyGraph:
+    """Pipeline schedule as a Daydream graph: lanes = stages, edges = deps.
 
-    Task (s, m) depends on (s-1, m) [activation arrival] and its own lane's
-    program order handles (s, m-1).  ``hop_time_s`` models the ppermute as
-    the producing task's trailing gap.
+    Rebuilt on the plan layer's scheduling core
+    (:func:`repro.parallel.plan.schedule_order`): task (s, m) depends on
+    (s-1, m) [activation arrival] and its own lane's program order encodes
+    the microbatch schedule.  The ppermute hop is a real
+    :data:`~repro.core.task.TaskKind.COMM` task on a per-link channel
+    carrying ``hop_bytes`` — visible to bandwidth/overlap what-ifs, unlike
+    the old model that buried it in the producing task's trailing gap.
+
+    The legacy fwd-only analytic form is the default; pass
+    ``bwd_stage_times_s`` for the full fwd+bwd step under ``schedule``
+    ("gpipe" | "1f1b").  For cluster placement (per-stage WorkerSpecs,
+    retunable hops, hybrid PP x DP) use
+    :class:`repro.parallel.plan.ParallelPlan` instead — this graph is the
+    single-timeline analytic view.
     """
+    from .plan import schedule_order
+    S = len(stage_times_s)
+    M = n_microbatches
+    bwd = list(bwd_stage_times_s) if bwd_stage_times_s is not None else None
     g = DependencyGraph()
-    tasks: Dict[tuple, Task] = {}
-    for m in range(n_microbatches):
-        for s, dt in enumerate(stage_times_s):
-            t = Task(name=f"stage{s}/mb{m}", kind=TaskKind.COMPUTE,
-                     thread=f"stage{s}", duration=float(dt),
-                     gap=float(hop_time_s), layer=f"stage{s}", phase="fwd")
-            g.add_task(t)
-            tasks[(s, m)] = t
+    fwd_tasks: Dict[tuple, Task] = {}
+    bwd_tasks: Dict[tuple, Task] = {}
+
+    def hop(src: Task, s_from: int, s_to: int, m: int) -> Task:
+        h = Task(name=f"hop:s{s_from}>s{s_to}/mb{m}", kind=TaskKind.COMM,
+                 thread=f"link:s{s_from}>s{s_to}", duration=float(hop_time_s),
+                 comm_bytes=float(hop_bytes), phase="comm",
+                 attrs={"p2p_role": "act" if s_to > s_from else "grad",
+                        "microbatch": m})
+        g.add_task(h)
+        g.add_edge(src, h)
+        return h
+
+    for s in range(S):
+        order = schedule_order(S, s, M, schedule) if bwd is not None \
+            else [("F", m) for m in range(M)]
+        for op, m in order:
+            if op == "F":
+                t = Task(name=f"stage{s}/mb{m}", kind=TaskKind.COMPUTE,
+                         thread=f"stage{s}", duration=float(stage_times_s[s]),
+                         layer=f"stage{s}", phase="fwd")
+                g.add_task(t)
+                fwd_tasks[(s, m)] = t
+            else:
+                t = Task(name=f"stage{s}/bwd/mb{m}", kind=TaskKind.COMPUTE,
+                         thread=f"stage{s}", duration=float(bwd[s]),
+                         layer=f"stage{s}", phase="bwd")
+                g.add_task(t)
+                g.add_edge(fwd_tasks[(s, m)], t)
+                bwd_tasks[(s, m)] = t
+    for s in range(S):
+        for m in range(M):
             if s > 0:
-                g.add_edge(tasks[(s - 1, m)], t)
+                src = fwd_tasks[(s - 1, m)]
+                dst = fwd_tasks[(s, m)]
+                if hop_time_s > 0 or hop_bytes > 0:
+                    g.add_edge(hop(src, s - 1, s, m), dst)
+                else:
+                    g.add_edge(src, dst)
+            if bwd is not None and s < S - 1:
+                src = bwd_tasks[(s + 1, m)]
+                dst = bwd_tasks[(s, m)]
+                if hop_time_s > 0 or hop_bytes > 0:
+                    g.add_edge(hop(src, s + 1, s, m), dst)
+                else:
+                    g.add_edge(src, dst)
     return g
 
 

@@ -1,0 +1,94 @@
+"""Hypothesis property tests for pipeline-schedule invariants.
+
+Optional-dependency module (``pytest.importorskip``) like the other
+property suites.  The invariants:
+
+* balanced-stage GPipe bubble is exactly ``(S - 1) / (M + S - 1)`` (and the
+  makespan ``(M + S - 1) * t_stage``) for any S, M, t — the simulator
+  reproduces the closed form, it is not baked in;
+* 1F1B never loses to GPipe on the same (arbitrary, unbalanced) stage
+  split when hops are free — it schedules backwards strictly earlier.
+  (With costly hops the two orders overlap communication differently and
+  either can win; the bounded unit tests cover that regime.)
+* a one-stage plan is exactly the replicate path: placing S=1 x dp
+  replicas equals ``ClusterGraph.build`` of the stage template — the p2p /
+  scoped-group wiring degenerates to the classic DDP build;
+* ``retune`` on a placed plan is bit-identical to a fresh placement.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given, settings  # noqa: E402
+
+from repro.core import ClusterGraph, CostModel, WorkerSpec  # noqa: E402
+from repro.parallel import ParallelPlan, StageProfile  # noqa: E402
+
+times = st.floats(min_value=1e-5, max_value=1e-1, allow_nan=False,
+                  allow_infinity=False)
+
+
+def plan_of(fwd, bwd, M, schedule, dp=1, act=0.0, grad=0.0):
+    profs = tuple(StageProfile(index=s, layers=(f"l{s}",), fwd_s=f,
+                               bwd_s=b, act_bytes=act, grad_bytes=grad)
+                  for s, (f, b) in enumerate(zip(fwd, bwd)))
+    return ParallelPlan(profs, M, schedule, dp)
+
+
+@settings(max_examples=40, deadline=None)
+@given(S=st.integers(1, 8), M=st.integers(1, 16), t=times)
+def test_balanced_gpipe_bubble_closed_form(S, M, t):
+    plan = plan_of([t] * S, [2 * t] * S, M, "gpipe")
+    makespan = plan.place().simulate().makespan
+    t_mb = 3 * t / M
+    assert makespan == pytest.approx((M + S - 1) * t_mb, rel=1e-9)
+    ideal = M * t_mb
+    bubble = 1 - ideal / makespan
+    assert bubble == pytest.approx((S - 1) / (M + S - 1), abs=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_1f1b_never_loses_to_gpipe_without_hops(data):
+    S = data.draw(st.integers(1, 6), label="S")
+    M = data.draw(st.integers(1, 12), label="M")
+    fwd = data.draw(st.lists(times, min_size=S, max_size=S), label="fwd")
+    bwd = data.draw(st.lists(times, min_size=S, max_size=S), label="bwd")
+    g = plan_of(fwd, bwd, M, "gpipe").place().simulate().makespan
+    f = plan_of(fwd, bwd, M, "1f1b").place().simulate().makespan
+    assert f <= g * (1 + 1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(M=st.integers(1, 8), dp=st.integers(1, 6), t=times,
+       grad=st.floats(min_value=0, max_value=1e9))
+def test_single_stage_plan_is_replicate_path(M, dp, t, grad):
+    plan = plan_of([t], [2 * t], M, "gpipe", dp=dp, grad=grad)
+    placed = plan.place().simulate()
+    tmpl = plan.stage_templates(CostModel())[0]
+    replicated = ClusterGraph.build(tmpl, dp).simulate()
+    assert placed.makespan == pytest.approx(replicated.makespan, rel=1e-12)
+    assert placed.worker_makespans() == \
+        pytest.approx(replicated.worker_makespans(), rel=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_plan_retune_matches_fresh_place(data):
+    S = data.draw(st.integers(1, 4), label="S")
+    M = data.draw(st.integers(1, 6), label="M")
+    dp = data.draw(st.integers(1, 3), label="dp")
+    sched = data.draw(st.sampled_from(["gpipe", "1f1b"]), label="sched")
+    t = data.draw(times, label="t")
+    plan = plan_of([t] * S, [2 * t] * S, M, sched, dp=dp,
+                   act=64e6, grad=128e6)
+    n = plan.num_workers
+    scales = st.floats(min_value=0.1, max_value=4.0)
+    specs = [WorkerSpec(compute_scale=data.draw(scales),
+                        bandwidth_scale=data.draw(scales))
+             for _ in range(n)]
+    retuned = plan.place().retune(specs).simulate()
+    fresh = plan.place(specs).simulate()
+    assert retuned.makespan == fresh.makespan
+    assert retuned.worker_makespans() == fresh.worker_makespans()

@@ -1,0 +1,401 @@
+"""Parallelism-plan subsystem (repro.parallel.plan + the pipeline route).
+
+The ISSUE's acceptance criteria live here:
+
+* simulated balanced-stage GPipe makespan matches the closed form
+  ``(M + S - 1) * t_stage`` to float precision;
+* ``pipeline:stages=S`` composes with ``amp`` / ``dgc`` / per-stage DP
+  through the registry, and the placed plan's p2p legs retune in
+  ``Scenario.sweep`` (bandwidth grids reuse one build; microbatch grids
+  reuse the cached stage partition).
+"""
+
+import pytest
+
+from repro.core import (ClusterGraph, CostModel, DependencyGraph, GraphError,
+                        OptimizationError, Scenario, Task, TaskKind,
+                        WorkerSpec, match_push_pull_groups, parse_stack,
+                        simulate, whatif)
+from repro.core.optimize import PipelineParallel, uniform_bandwidth_specs
+from repro.parallel import (ParallelPlan, StageProfile, partition_stages,
+                            pipeline_graph, schedule_order)
+from synthgraphs import training_step_graph
+
+LAYERS = 8
+FWD, BWD, UPD = 2e-3, 4e-3, 1e-3
+GRADS = {f"l{i}": 30e6 for i in range(LAYERS)}
+ACTS = {f"l{i}": 4e6 for i in range(LAYERS)}
+
+
+@pytest.fixture()
+def step_graph():
+    return training_step_graph(layers=LAYERS, fwd=FWD, bwd=BWD, upd=UPD)
+
+
+@pytest.fixture()
+def scenario(step_graph):
+    return Scenario(step_graph, layer_grad_bytes=GRADS,
+                    activation_bytes=ACTS)
+
+
+def balanced_plan(S, M, *, schedule="gpipe", dp=1, act=0.0, grad=0.0,
+                  upd=0.0):
+    profs = tuple(StageProfile(index=s, layers=(f"l{s}",), fwd_s=FWD,
+                               bwd_s=BWD, update_s=upd, act_bytes=act,
+                               grad_bytes=grad) for s in range(S))
+    return ParallelPlan(profs, M, schedule, dp)
+
+
+class TestPartition:
+    def test_contiguous_balanced_split(self, step_graph):
+        profs = partition_stages(step_graph, 4, activation_bytes=ACTS,
+                                 layer_grad_bytes=GRADS)
+        assert [p.layers for p in profs] == \
+            [("l0", "l1"), ("l2", "l3"), ("l4", "l5"), ("l6", "l7")]
+        for p in profs:
+            assert p.fwd_s == pytest.approx(2 * FWD)
+            assert p.bwd_s == pytest.approx(2 * BWD)
+            assert p.update_s == pytest.approx(2 * UPD)
+            assert p.act_bytes == ACTS[p.layers[-1]]
+            assert p.grad_bytes == pytest.approx(2 * 30e6)
+
+    def test_unbalanced_layers_balance_by_time(self):
+        g = DependencyGraph()
+        # one heavy layer + three light ones: the heavy layer gets its own
+        # stage
+        for i, d in enumerate([9e-3, 1e-3, 1e-3, 1e-3]):
+            g.add_task(Task(f"fwd:l{i}", TaskKind.COMPUTE, "device", d,
+                            layer=f"l{i}", phase="fwd"))
+        profs = partition_stages(g, 2)
+        assert profs[0].layers == ("l0",)
+        assert profs[1].layers == ("l1", "l2", "l3")
+
+    def test_too_few_layers_raises(self, step_graph):
+        with pytest.raises(GraphError):
+            partition_stages(step_graph, LAYERS + 1)
+
+    def test_unmapped_profile_raises(self):
+        g = DependencyGraph()
+        g.add_task(Task("t", TaskKind.COMPUTE, "device", 1e-3))
+        with pytest.raises(GraphError):
+            partition_stages(g, 2)
+
+
+class TestSchedules:
+    def test_gpipe_order(self):
+        assert schedule_order(4, 1, 3, "gpipe") == \
+            [("F", 0), ("F", 1), ("F", 2), ("B", 0), ("B", 1), ("B", 2)]
+
+    def test_1f1b_warmup_and_drain(self):
+        # last stage alternates from the start; first stage warms up S-1
+        assert schedule_order(3, 2, 3, "1f1b") == \
+            [("F", 0), ("B", 0), ("F", 1), ("B", 1), ("F", 2), ("B", 2)]
+        assert schedule_order(3, 0, 3, "1f1b") == \
+            [("F", 0), ("F", 1), ("F", 2), ("B", 0), ("B", 1), ("B", 2)]
+
+    def test_every_microbatch_once(self):
+        for sched in ("gpipe", "1f1b"):
+            for s in range(5):
+                order = schedule_order(5, s, 7, sched)
+                assert sorted(m for op, m in order if op == "F") == list(range(7))
+                assert sorted(m for op, m in order if op == "B") == list(range(7))
+
+    def test_unknown_schedule_raises(self):
+        with pytest.raises(GraphError):
+            schedule_order(2, 0, 2, "interleaved")
+
+
+class TestClosedForm:
+    def test_balanced_gpipe_matches_closed_form(self):
+        """Acceptance: (M + S - 1) * t_stage to float precision."""
+        for S, M in [(4, 8), (2, 16), (8, 8), (4, 1), (1, 4)]:
+            res = balanced_plan(S, M).place().simulate()
+            t_mb = (FWD + BWD) / M
+            assert res.makespan == pytest.approx((M + S - 1) * t_mb,
+                                                 rel=1e-12)
+
+    def test_update_tail_adds_once(self):
+        res = balanced_plan(4, 8, upd=1e-3).place().simulate()
+        t_mb = (FWD + BWD) / 8
+        assert res.makespan == pytest.approx((8 + 4 - 1) * t_mb + 1e-3,
+                                             rel=1e-12)
+
+    def test_1f1b_equals_gpipe_on_balanced(self):
+        for S, M in [(4, 8), (2, 16), (8, 4)]:
+            g = balanced_plan(S, M, schedule="gpipe").place().simulate()
+            f = balanced_plan(S, M, schedule="1f1b").place().simulate()
+            assert f.makespan == pytest.approx(g.makespan, rel=1e-12)
+
+    def test_partitioned_profile_matches_closed_form(self, scenario):
+        """End-to-end through the registry: partition + place + simulate.
+
+        Closed form incl. hops: the activation hop (fwd fill) and gradient
+        hop (bwd drain) each cross S-1 stage boundaries on the critical
+        path; steady-state hops overlap with compute (h << t_mb here).
+        """
+        S, M = 4, 16
+        pred = scenario.predict(PipelineParallel(stages=S, microbatches=M))
+        t_mb = (LAYERS / S) * (FWD + BWD) / M
+        upd = (LAYERS / S) * UPD
+        cost = CostModel()
+        bw = cost.hw.ici_bandwidth * cost.hw.ici_links_per_axis
+        hop = (4e6 / M) / bw + cost.collectives.hop_latency
+        expected = (M + S - 1) * t_mb + 2 * (S - 1) * hop + upd
+        assert pred.predicted == pytest.approx(expected, rel=1e-12)
+        assert pred.cluster is not None
+        assert len(pred.cluster.per_worker) == S
+
+
+class TestHops:
+    def test_act_payload_slows_pipe(self):
+        base = balanced_plan(4, 8).place().simulate().makespan
+        heavy = balanced_plan(4, 8, act=100e6).place().simulate().makespan
+        assert heavy > base
+
+    def test_cross_pod_stage_boundary_uses_dcn(self):
+        plan = balanced_plan(4, 8, act=50e6)
+        single = plan.place().simulate().makespan
+        pods = [WorkerSpec(pod=s) for s in range(4)]   # every hop crosses
+        multi = plan.place(pods).simulate().makespan
+        assert multi > single
+
+    def test_p2p_legs_retune_like_ring_legs(self):
+        """Acceptance: retuned p2p legs == fresh build, bit-identical."""
+        plan = balanced_plan(4, 8, act=50e6, grad=30e6, dp=2)
+        cg = plan.place()
+        skew = [WorkerSpec(bandwidth_scale=0.25 if i == 2 else 1.0,
+                           compute_scale=1.5 if i == 5 else 1.0)
+                for i in range(8)]
+        retuned = cg.retune(skew).simulate()
+        fresh = plan.place(skew).simulate()
+        assert retuned.makespan == fresh.makespan
+        assert retuned.worker_makespans() == fresh.worker_makespans()
+
+    def test_hop_tasks_are_comm_kind(self):
+        cg = balanced_plan(3, 4, act=8e6).place()
+        hops = [t for t in cg.graph.tasks() if t.kind == TaskKind.COMM]
+        assert len(hops) == 2 * 2 * 4      # (S-1) boundaries x 2 dirs x M
+        assert all(t.comm_bytes == pytest.approx(8e6 / 4) for t in hops)
+
+
+class TestHybrid:
+    def test_per_stage_rings_exist_and_gate_update(self):
+        plan = balanced_plan(2, 4, grad=60e6, dp=2)
+        cg = plan.place()
+        legs = [t for t in cg.graph.tasks()
+                if t.attrs.get("collective") and "leg" in t.name]
+        # 2 stages x 2 replicas x 2(dp-1) legs
+        assert len(legs) == 2 * 2 * 2
+        res = cg.simulate()
+        no_dp = balanced_plan(2, 4, grad=60e6).place().simulate()
+        assert res.makespan > no_dp.makespan
+
+    def test_s1_plan_equals_replicate_path(self):
+        """Acceptance satellite: plan build == replicate path when S=1."""
+        plan = balanced_plan(1, 4, grad=120e6, dp=4)
+        placed = plan.place().simulate()
+        tmpl = plan.stage_templates(CostModel())[0]
+        replicated = ClusterGraph.build(tmpl, 4).simulate()
+        assert placed.makespan == pytest.approx(replicated.makespan,
+                                                rel=1e-12)
+        assert placed.worker_makespans() == \
+            pytest.approx(replicated.worker_makespans(), rel=1e-12)
+
+    def test_hybrid_on_heterogeneous_pods(self, scenario):
+        """Stage replicas per pod: DP rings stay intra-pod (ICI), hops
+        cross pods (DCN) — the BlueConnect-style layout for PP x DP."""
+        opt = PipelineParallel(stages=2, microbatches=8, dp=2)
+        pods = [WorkerSpec(pod=s) for s in (0, 0, 1, 1)]
+        flat = [WorkerSpec() for _ in range(4)]
+        import dataclasses as dc
+        on_pods = dc.replace(scenario, workers=pods).predict(opt)
+        on_flat = dc.replace(scenario, workers=flat).predict(opt)
+        # only the act/grad hops cross the pod boundary; rings stay local
+        assert on_pods.predicted > on_flat.predicted
+
+    def test_worker_spec_count_must_match_plan(self, scenario):
+        import dataclasses as dc
+        s = dc.replace(scenario, workers=[WorkerSpec()] * 3)
+        with pytest.raises(OptimizationError):
+            s.predict(PipelineParallel(stages=2, microbatches=4, dp=2))
+        s = dc.replace(scenario, workers=7)
+        with pytest.raises(OptimizationError):
+            s.predict(PipelineParallel(stages=2, microbatches=4))
+
+
+class TestRegistryRoute:
+    def test_cli_continuation_form(self):
+        opt, over = parse_stack(
+            "pipeline:stages=4,microbatches=16,schedule=1f1b")
+        assert isinstance(opt, PipelineParallel)
+        assert (opt.stages, opt.microbatches, opt.schedule) == (4, 16, "1f1b")
+        assert over == {}
+        # continuation + following optimization + scenario override
+        opt, over = parse_stack(
+            "pipeline:stages=2,microbatches=8,amp,workers=4")
+        assert [o.name for o in opt.opts] == ["pipeline", "amp"]
+        assert over == {"workers": 4}
+        with pytest.raises(OptimizationError):
+            parse_stack("stages=4,pipeline")
+
+    def test_pipeline_composes_with_amp_and_dgc(self, scenario):
+        plain = scenario.predict("pipeline:stages=4:microbatches=8")
+        amped = scenario.predict("pipeline:stages=4:microbatches=8,amp")
+        assert amped.predicted < plain.predicted
+        hybrid = scenario.predict(
+            "pipeline:stages=4:microbatches=8:dp=2")
+        dgc = scenario.predict(
+            "pipeline:stages=4:microbatches=8:dp=2,dgc:compression=0.01")
+        assert dgc.predicted < hybrid.predicted
+
+    def test_pre_stack_transforms_profile(self, scenario):
+        """amp|pipeline: AMP reshapes the profile before partitioning."""
+        pre = scenario.predict("amp,pipeline:stages=4:microbatches=8")
+        plain = scenario.predict("pipeline:stages=4:microbatches=8")
+        assert pre.predicted < plain.predicted
+
+    def test_two_pipelines_raise(self, scenario):
+        with pytest.raises(OptimizationError):
+            scenario.predict("pipeline:stages=2,pipeline:stages=4")
+
+    def test_comm_inserting_pre_stack_rejected(self, scenario):
+        """ddp|pipeline must not silently predict a comm-free pipeline:
+        the compute-only partition would drop the inserted all-reduces
+        (use pipeline:dp=N instead)."""
+        for spec in ("ddp,pipeline:stages=4:microbatches=8",
+                     "p3:bandwidth=5e9,pipeline:stages=4:microbatches=8"):
+            with pytest.raises(OptimizationError, match="drop"):
+                scenario.predict(spec)
+        # greedy_search probes such stacks; they must be skipped, not won
+        from repro.core import greedy_search
+        from repro.core.optimize import DDP, PipelineParallel
+        best, _ = greedy_search(
+            scenario, max_depth=2,
+            candidates=[DDP(), PipelineParallel(stages=4, microbatches=8)])
+        if best is not None:
+            names = [o.name for o in getattr(best, "opts", [best])]
+            assert names != ["ddp", "pipeline"]
+
+    def test_profile_with_existing_collectives_still_places(self, scenario):
+        """Pre-existing collectives in the *baseline* profile are dropped
+        with documented compute-only semantics (no raise) — compiled
+        profiles legitimately contain them."""
+        tf = whatif.what_if_distributed(scenario.graph, GRADS, 8)
+        s = Scenario(tf.graph, layer_grad_bytes=GRADS,
+                     activation_bytes=ACTS)
+        pred = s.predict("pipeline:stages=4:microbatches=8")
+        assert pred.cluster is not None
+
+    def test_trace_route_rejects_pipeline(self, tmp_path, step_graph):
+        from repro import traceio
+        res = simulate(step_graph)
+        for i in range(2):
+            traceio.export_graph_trace(step_graph, res,
+                                       str(tmp_path / f"worker{i}.json"))
+        s = Scenario(trace_dir=str(tmp_path))
+        with pytest.raises(OptimizationError):
+            s.predict("pipeline:stages=2:microbatches=4")
+
+    def test_legacy_wrapper(self, step_graph):
+        res = whatif.cluster_what_if_pipeline(
+            step_graph, 4, 8, activation_bytes=ACTS,
+            layer_grad_bytes=GRADS)
+        assert len(res.per_worker) == 4
+        direct = Scenario(step_graph, layer_grad_bytes=GRADS,
+                          activation_bytes=ACTS).predict(
+            PipelineParallel(stages=4, microbatches=8))
+        assert res.makespan == pytest.approx(direct.predicted, rel=1e-12)
+
+
+class TestPipelineSweeps:
+    def test_microbatch_grid_reuses_partition(self, scenario):
+        grid = {"microbatches": [2, 4, 8, 16], "stages": [4]}
+        reused = scenario.sweep("pipeline", grid, reuse=True)
+        rebuilt = scenario.sweep("pipeline", grid, reuse=False)
+        assert [p.predicted for p in reused] == \
+            [p.predicted for p in rebuilt]
+        # more microbatches -> smaller bubble -> faster
+        ms = [p.predicted for p in reused]
+        assert ms == sorted(ms, reverse=True)
+
+    def test_bandwidth_grid_retunes_one_build(self, scenario):
+        opt = PipelineParallel(stages=4, microbatches=8, dp=2)
+        grid = {"workers": uniform_bandwidth_specs(8, [0.25, 0.5, 1.0, 2.0])}
+        reused = scenario.sweep(opt, grid, reuse=True)
+        rebuilt = scenario.sweep(opt, grid, reuse=False)
+        assert [p.predicted for p in reused] == \
+            [p.predicted for p in rebuilt]
+        ms = [p.predicted for p in reused]
+        assert ms == sorted(ms, reverse=True)
+
+    def test_schedule_grid(self, scenario):
+        preds = scenario.sweep("pipeline", {
+            "stages": [4], "microbatches": [8],
+            "schedule": ["gpipe", "1f1b"]})
+        assert [p.point["schedule"] for p in preds] == ["gpipe", "1f1b"]
+        # same work, same bubble on balanced stages; only the hop overlap
+        # differs between the two orders
+        assert preds[0].predicted == pytest.approx(preds[1].predicted,
+                                                   rel=0.02)
+
+
+class TestLegacyPipelineGraph:
+    def test_hop_is_a_real_comm_task(self):
+        """Satellite fix: the ppermute hop used to be a trailing gap on the
+        producing task — invisible to bandwidth what-ifs."""
+        g = pipeline_graph([1.0] * 3, 4, 0.5, hop_bytes=1e6)
+        hops = [t for t in g.tasks() if t.kind == TaskKind.COMM]
+        assert len(hops) == 2 * 4
+        assert all(t.comm_bytes == 1e6 for t in hops)
+        base = simulate(g).makespan
+        faster = whatif.what_if_bandwidth(g, 4.0).simulate().makespan
+        assert faster < base
+        # and gaps carry nothing anymore
+        assert all(t.gap == 0.0 for t in g.tasks())
+
+    def test_fwd_bwd_closed_form(self):
+        g = pipeline_graph([1.0] * 4, 8, bwd_stage_times_s=[2.0] * 4)
+        assert simulate(g).makespan == pytest.approx((8 + 4 - 1) * 3.0)
+        f = pipeline_graph([1.0] * 4, 8, bwd_stage_times_s=[2.0] * 4,
+                           schedule="1f1b")
+        assert simulate(f).makespan == pytest.approx((8 + 4 - 1) * 3.0)
+
+
+class TestPushPullTracePath:
+    """Satellite: P3 push/pull pairing on the asymmetric
+    from_worker_graphs path (was replicate-build-only before PR 4)."""
+
+    def test_from_worker_graphs_matches_build(self, step_graph):
+        tf = whatif.what_if_p3(step_graph, GRADS, 4, bandwidth=5e9)
+        built = ClusterGraph.build(tf.graph, 4,
+                                   schedule=tf.schedule).simulate()
+        asym = ClusterGraph.from_worker_graphs(
+            [tf.graph] * 4, schedule=tf.schedule).simulate()
+        assert asym.makespan == pytest.approx(built.makespan, rel=1e-12)
+
+    def test_pairs_matched_by_layer_occurrence(self, step_graph):
+        tf = whatif.what_if_p3(step_graph, GRADS, 2, bandwidth=5e9)
+        groups = match_push_pull_groups([tf.graph, tf.graph])
+        assert groups
+        for group in groups:
+            assert len(group) == 2
+            (p0, pulls0), (p1, pulls1) = group
+            assert p0.name == p1.name
+            assert [v.name for v in pulls0] == [v.name for v in pulls1]
+
+    def test_inconsistent_sets_raise(self, step_graph):
+        tf = whatif.what_if_p3(step_graph, GRADS, 2, bandwidth=5e9)
+        with pytest.raises(GraphError):
+            ClusterGraph.from_worker_graphs([tf.graph, step_graph])
+
+    def test_aggregation_semantics_on_asymmetric_path(self, step_graph):
+        """A straggler's late pushes delay every worker's pulls through
+        the aggregation barrier — now also on the imported-graph path."""
+        tf = whatif.what_if_p3(step_graph, GRADS, 4, bandwidth=5e9)
+        specs = [WorkerSpec(compute_scale=2.0 if i == 0 else 1.0)
+                 for i in range(4)]
+        uni = ClusterGraph.from_worker_graphs(
+            [tf.graph] * 4, schedule=tf.schedule).simulate()
+        strag = ClusterGraph.from_worker_graphs(
+            [tf.graph] * 4, specs, schedule=tf.schedule).simulate()
+        assert strag.per_worker[3].makespan > uni.per_worker[3].makespan
