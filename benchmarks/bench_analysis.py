@@ -1,0 +1,112 @@
+"""Diagnosis-subsystem throughput: critical path + diff must stay O(V+E).
+
+Workload: the ISSUE's 4-worker x ~12.5k-events/worker synthetic cluster
+(50k events total, straggler + clock skew) against a 10k-event control —
+the same trace sets ``bench_traceio`` imports.  Timed stages:
+
+* ``critical_path`` — ``simulate(record_binding=True)`` over the global
+  graph plus the chain walk and attribution
+  (:func:`repro.analysis.cluster_critical_path`);
+* ``diff`` — predicted per-worker timelines rendered and matched
+  task-by-task against the captured trace set
+  (:func:`repro.analysis.diff_cluster`).
+
+Acceptance (wired into CI):
+
+* scaling gate: per-event cost at 50k events <= 2.5x the 10k-event cost
+  for both stages — a super-linear regression in the binding walk, the
+  event collapse, or the occurrence matching blows past it (this is the
+  real O(V+E) guard);
+* floor gate: critical path sustains >= 10k events/s, diff >= 5k (diff
+  renders both timelines, runs the staleness guard pass, and matches
+  twice — the lower absolute floor keeps the gate meaningful without
+  flaking under shared-machine load);
+* correctness smoke: the path's breakdown sums to the makespan and the
+  self-diff reports ~zero error (the cheap ends of the test-suite
+  invariants, asserted here so a broken build cannot post numbers).
+
+CSV: stage,workers,events,seconds,events_per_sec,per_event_vs_small
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from repro.analysis import cluster_critical_path, diff_cluster
+from repro.core import ClusterGraph, CostModel
+from repro.traceio import load_trace_dir, write_synthetic_trace_dir
+
+from benchmarks.common import fmt_csv
+
+WORKERS = 4
+# events per worker = 4*layers + 2  =>  totals of 10_000 and 50_000
+SIZES = {"small": 624, "large": 3124}
+SCALING_GATE = 2.5
+FLOOR_EVENTS_PER_SEC = {"critical_path": 10_000.0, "diff": 5_000.0}
+
+
+def _events_total(layers: int) -> int:
+    return WORKERS * (4 * layers + 2)
+
+
+def _time_stage(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return time.perf_counter() - t0, out
+
+
+def run() -> str:
+    rows = []
+    per_event = {"critical_path": {}, "diff": {}}
+    with tempfile.TemporaryDirectory() as tmp:
+        for name, layers in SIZES.items():
+            d = os.path.join(tmp, name)
+            write_synthetic_trace_dir(
+                d, WORKERS, layers=layers,
+                compute_scales=[1.5, 1.0, 1.0, 1.0],
+                clock_offsets=[0.0, 0.05, -0.03, 0.01])
+            events = _events_total(layers)
+            imp = load_trace_dir(d)
+            cg = ClusterGraph.from_traces(imp, cost=CostModel())
+
+            def cp_stage():
+                res = cg.simulate(record_binding=True)
+                return res, cluster_critical_path(cg, res)
+
+            t_cp, (res, cp) = min(
+                (_time_stage(cp_stage) for _ in range(2)),
+                key=lambda p: p[0])
+            bd = cp.breakdown()
+            assert abs(sum(bd.values()) - cp.makespan) <= \
+                1e-9 * max(cp.makespan, 1.0), "critical path lost time"
+
+            t_diff, diff = min((_time_stage(
+                lambda: diff_cluster(cg, res, imp)) for _ in range(2)),
+                key=lambda p: p[0])
+            assert not diff.unmatched_predicted and \
+                not diff.unmatched_captured, "self-diff failed to match"
+            assert diff.max_abs_error() <= 1e-9, "self-diff is not ~zero"
+
+            for stage, t in (("critical_path", t_cp), ("diff", t_diff)):
+                per_event[stage][name] = t / events
+                rows.append([stage, WORKERS, events, f"{t:.3f}",
+                             f"{events / t:.0f}",
+                             f"{per_event[stage][name] / per_event[stage]['small']:.2f}"])
+    for stage, pe in per_event.items():
+        ratio = pe["large"] / pe["small"]
+        assert ratio <= SCALING_GATE, (
+            f"{stage} is super-linear: 50k-event per-event cost is "
+            f"{ratio:.2f}x the 10k-event cost (acceptance: <= "
+            f"{SCALING_GATE}x)")
+        throughput = 1.0 / pe["large"]
+        assert throughput >= FLOOR_EVENTS_PER_SEC[stage], (
+            f"{stage} sustains only {throughput:.0f} events/s "
+            f"(acceptance: >= {FLOOR_EVENTS_PER_SEC[stage]:.0f})")
+    return fmt_csv(rows, ["stage", "workers", "events", "seconds",
+                          "events_per_sec", "per_event_vs_small"])
+
+
+if __name__ == "__main__":
+    print(run())

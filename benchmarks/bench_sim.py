@@ -11,6 +11,12 @@ Two workloads:
   actually simulate.  Event-driven engine only (the legacy loop is run
   once on a smaller replica count for reference).
 
+Also gates the diagnosis subsystem's zero-cost contract: binding-
+predecessor recording (``simulate(record_binding=True)``, what
+``repro.analysis`` walks for critical paths) must keep the instrumented
+run within 10% of the plain run on the 50k-task wide graph — asserted,
+so a recording change that leaks cost into the hot loop fails CI.
+
 CSV: workload,tasks,engine,seconds,tasks_per_sec,speedup_vs_legacy
 """
 
@@ -84,6 +90,36 @@ def run() -> str:
                  f"{t_slow / t_fast:.1f}"])
     rows.append(["wide", n, "legacy", f"{t_slow:.3f}", f"{n / t_slow:.0f}",
                  "1.0"])
+
+    # binding-recording overhead gate: the instrumented run must stay
+    # within 10% of the plain run.  Interleaved pairs cancel machine-load
+    # drift, and the GC is paused across the timed region — each simulate
+    # allocates ~100k objects, and with the legacy run's results still
+    # live a gen-2 collection landing inside one timed call skews a
+    # single-digit-percent comparison by 2-3x.
+    import gc
+    r_rec = simulate(g, record_binding=True)
+    assert r_rec.makespan == r_fast.makespan, "recording changed the timeline"
+    assert len(r_rec.binding) == n, "recording missed tasks"
+    del r_rec, r_slow
+    gc.collect()
+    gc.disable()
+    try:
+        t_plain, t_rec = [], []
+        for _ in range(5):
+            t_plain.append(_time(simulate, g))
+            t_rec.append(_time(lambda gg: simulate(gg, record_binding=True),
+                               g))
+    finally:
+        gc.enable()
+    overhead = min(t_rec) / min(t_plain)
+    assert overhead <= 1.10, (
+        f"binding recording costs {overhead:.2f}x the plain run "
+        f"(acceptance: <= 1.10x — keep the disabled path byte-identical "
+        f"and the enabled path out of the hot loop)")
+    rows.append(["wide", n, "event+binding",
+                 f"{min(t_rec):.3f}", f"{n / min(t_rec):.0f}",
+                 f"overhead={overhead:.2f}x"])
 
     cg = cluster_graph()
     n = len(cg.graph)

@@ -23,6 +23,7 @@ BENCHES = {
     "sweep_reuse": "benchmarks.bench_sweep",
     "traceio_import": "benchmarks.bench_traceio",
     "pipeline_plan": "benchmarks.bench_pipeline",
+    "analysis_diag": "benchmarks.bench_analysis",
 }
 
 

@@ -1,0 +1,39 @@
+"""Diagnosis subsystem: critical paths, trace diffs, opportunity ranking.
+
+The simulator (:mod:`repro.core.simulate`), the cluster graphs
+(:mod:`repro.core.cluster`), and the trace I/O layer
+(:mod:`repro.traceio`) predict *a* makespan; this package explains it:
+
+* :mod:`repro.analysis.critical_path` — walk the recorded binding
+  predecessors (``simulate(record_binding=True)``) to the
+  makespan-defining chain and attribute it into compute / comm / host /
+  idle, per worker.
+* :mod:`repro.analysis.diff` — align a captured per-worker trace against
+  the predicted timeline task-by-task (paper §6 validation methodology as
+  a reusable tool): per-task error distributions, per-kind rollups, top-K
+  mispredictions.
+* :mod:`repro.analysis.opportunity` — Amdahl-style speedup upper bounds
+  per registered optimization, computed through the real simulator, which
+  is the ordering ``hillclimb --search-whatif`` explores.
+
+User surfaces: ``python -m repro.launch.diagnose --trace-dir DIR``,
+``perf_report --critical-path``, ``Prediction.critical_path``, and
+``Scenario.diff_against(trace_dir)``.
+"""
+
+from .critical_path import (CATEGORIES, CriticalPath, PathSegment,
+                            cluster_critical_path, extract_critical_path)
+from .diff import (KindStats, TaskDiff, TraceDiff, diff_cluster, diff_graph,
+                   diff_prediction, diff_worker_events)
+from .opportunity import (NO_HEADROOM, Opportunity, format_opportunity_table,
+                          opportunity_bound, rank_opportunities,
+                          searchable_candidates)
+
+__all__ = [
+    "CATEGORIES", "CriticalPath", "PathSegment",
+    "cluster_critical_path", "extract_critical_path",
+    "KindStats", "TaskDiff", "TraceDiff",
+    "diff_cluster", "diff_graph", "diff_prediction", "diff_worker_events",
+    "NO_HEADROOM", "Opportunity", "format_opportunity_table",
+    "opportunity_bound", "rank_opportunities", "searchable_candidates",
+]

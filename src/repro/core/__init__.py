@@ -35,7 +35,8 @@ from .graph import DependencyGraph, GraphError
 from .simulate import (simulate, simulate_reference, SimResult,
                        default_schedule, make_priority_schedule)
 from .cluster import (ClusterGraph, ClusterResult, WorkerSpec,
-                      match_collective_groups, match_push_pull_groups)
+                      match_collective_gid_groups, match_collective_groups,
+                      match_push_pull_groups, match_wired_p2p)
 from .transform import (GraphTransform, predicted_speedup, by_kind, by_name,
                         by_layer, by_phase, on_device, all_of, any_of)
 from .costmodel import CostModel, CollectiveModel, MeshTopology
@@ -58,7 +59,8 @@ __all__ = [
     "simulate", "simulate_reference", "SimResult",
     "default_schedule", "make_priority_schedule",
     "ClusterGraph", "ClusterResult", "WorkerSpec",
-    "match_collective_groups", "match_push_pull_groups",
+    "match_collective_gid_groups", "match_collective_groups",
+    "match_push_pull_groups", "match_wired_p2p",
     "GraphTransform", "predicted_speedup",
     "by_kind", "by_name", "by_layer", "by_phase", "on_device", "all_of", "any_of",
     "CostModel", "CollectiveModel", "MeshTopology",

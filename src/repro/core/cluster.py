@@ -166,7 +166,14 @@ def match_collective_groups(graphs: Sequence[DependencyGraph]
         for thread in sorted(wg.lanes):
             for uid in wg.lanes[thread]:
                 t = wg.get(uid)
-                if t.kind == TaskKind.COLLECTIVE and t.attrs.get("collective"):
+                if t.kind == TaskKind.COLLECTIVE \
+                        and t.attrs.get("collective") \
+                        and t.attrs.get("coll_gid") is None:
+                    # gid-carrying collectives (our own exports) belong to
+                    # match_collective_gid_groups — they may legitimately
+                    # exist on a worker *subset* (per-stage rings), which
+                    # the every-worker consistency check below would
+                    # misread as a corrupt trace set
                     key = (t.name, seen[t.name])
                     seen[t.name] += 1
                     keyed[key] = t
@@ -192,6 +199,51 @@ def match_collective_groups(graphs: Sequence[DependencyGraph]
                 f"collective {key[0]!r}#{key[1]} has conflicting ops across "
                 f"workers: {sorted(ops)}")
         groups.append((ops.pop(), members))
+    return groups
+
+
+def match_collective_gid_groups(graphs: Sequence[DependencyGraph]
+                                ) -> List[Tuple[str, Tuple[int, ...],
+                                                List[Task]]]:
+    """Match exported collectives across per-worker graphs by ``coll_gid``.
+
+    Traces this repo exports stamp every collapsed collective with the
+    graph-unique gid of the structure it came from, which identifies the
+    logical collective *exactly* — including collectives that exist only
+    on a worker subset (hybrid PP x DP per-stage gradient rings), which
+    (name, occurrence) matching cannot express because it requires every
+    worker to carry every key.  Returns ``(op, worker_ids, members)`` per
+    gid shared by >= 2 workers, ordered by gid (the original build's
+    wiring order); single-worker gids stay local (a truncated set degrades
+    instead of crashing).  Foreign captures carry no gids and fall through
+    to :func:`match_collective_groups` untouched.
+    """
+    by_gid: Dict[int, List[Tuple[int, Task]]] = {}
+    for w, wg in enumerate(graphs):
+        for thread in sorted(wg.lanes):
+            for uid in wg.lanes[thread]:
+                t = wg.get(uid)
+                if t.kind == TaskKind.COLLECTIVE \
+                        and t.attrs.get("collective") \
+                        and t.attrs.get("coll_gid") is not None:
+                    by_gid.setdefault(int(t.attrs["coll_gid"]),
+                                      []).append((w, t))
+    groups: List[Tuple[str, Tuple[int, ...], List[Task]]] = []
+    for gid in sorted(by_gid):
+        group = by_gid[gid]
+        if len(group) < 2:
+            continue
+        ids = tuple(w for w, _ in group)
+        if len(set(ids)) != len(ids):
+            raise GraphError(
+                f"collective gid {gid} appears more than once in one "
+                f"worker's trace — corrupt or re-stamped trace set")
+        ops = {t.attrs["collective"] for _, t in group}
+        if len(ops) > 1:
+            raise GraphError(
+                f"collective gid {gid} has conflicting ops across "
+                f"workers: {sorted(ops)}")
+        groups.append((ops.pop(), ids, [t for _, t in group]))
     return groups
 
 
@@ -252,6 +304,71 @@ def match_push_pull_groups(graphs: Sequence[DependencyGraph]
                 f"{' ...' if len(missing) > 5 else ''} — cannot pair "
                 f"parameter-server transfers across an inconsistent set")
     return [[keyed[key] for keyed in per_worker] for key in orders[0]]
+
+
+def max_imported_gid(graphs: Sequence[DependencyGraph]) -> int:
+    """Largest collective/p2p gid any imported task still carries.
+
+    Re-imported tasks keep exported ``coll_gid`` / ``p2p_gid`` /
+    ``p2p_in`` attrs (fused-mode members and unmatched hop legs keep them
+    verbatim through wiring), while a fresh :class:`ClusterGraph` hands
+    out gids from 1 — so a rebuild over imported graphs must seed its
+    counter above this value or a fresh gid can collide with a stale one
+    and the next export cycle collapses/wires the wrong tasks together.
+    """
+    m = 0
+    for wg in graphs:
+        for t in wg.tasks():
+            for g in (t.attrs.get("coll_gid"), t.attrs.get("p2p_gid")):
+                if isinstance(g, (int, float)):
+                    m = max(m, int(g))
+            for g in t.attrs.get("p2p_in", ()):
+                m = max(m, int(g))
+    return m
+
+
+def match_wired_p2p(graphs: Sequence[DependencyGraph]
+                    ) -> List[Tuple[int, int, Task, int, Task]]:
+    """Match exported point-to-point hops across per-worker graphs.
+
+    A hop wired by :meth:`ClusterGraph.wire_p2p` exports with
+    ``attrs["p2p_gid"]`` on the sender-side leg and the same gid in the
+    receiver task's ``attrs["p2p_in"]`` — provenance that survives the
+    per-worker Chrome/JSONL round trip even though the cross-worker edge
+    itself is dropped at export.  Returns ``(gid, src_worker, leg_task,
+    dst_worker, recv_task)`` per matched hop, ordered by gid (the wiring
+    order of the original build, so re-wiring is deterministic).  Hops
+    whose other side is absent (foreign or truncated traces) are skipped —
+    they stay plain worker-local timeline events, the pre-provenance
+    behavior.
+    """
+    legs: Dict[int, Tuple[int, Task]] = {}
+    recvs: Dict[int, Tuple[int, Task]] = {}
+    for w, wg in enumerate(graphs):
+        for thread in sorted(wg.lanes):
+            for uid in wg.lanes[thread]:
+                t = wg.get(uid)
+                gid = t.attrs.get("p2p_gid")
+                if gid is not None and t.kind == TaskKind.COMM:
+                    if int(gid) in legs:
+                        raise GraphError(
+                            f"p2p gid {gid} appears on more than one hop "
+                            f"leg across the trace set — corrupt or "
+                            f"re-stamped traces cannot be re-wired")
+                    legs[int(gid)] = (w, t)
+                for g in t.attrs.get("p2p_in", ()):
+                    if int(g) in recvs:
+                        raise GraphError(
+                            f"p2p gid {g} is claimed by more than one "
+                            f"receiver across the trace set — corrupt or "
+                            f"re-stamped traces cannot be re-wired")
+                    recvs[int(g)] = (w, t)
+    out: List[Tuple[int, int, Task, int, Task]] = []
+    for gid in sorted(set(legs) & set(recvs)):
+        (sw, leg), (dw, recv) = legs[gid], recvs[gid]
+        if sw != dw:
+            out.append((gid, sw, leg, dw, recv))
+    return out
 
 
 @dataclasses.dataclass
@@ -394,6 +511,8 @@ class ClusterGraph:
         cost = cost or CostModel()
         g = DependencyGraph()
         cg = cls(g, specs, cost, schedule, collective_mode)
+        # fresh gids must not collide with gids the traces carried in
+        cg._gid = max_imported_gid(graphs)
         remaps = [cg._clone_worker(i, spec, wg)
                   for i, (wg, spec) in enumerate(zip(graphs, specs))]
         if start_skews:
@@ -401,6 +520,13 @@ class ClusterGraph:
                 if skew > 0:
                     cg._add_start_skew(i, skew, remaps[i], graphs[i])
         if len(graphs) > 1:
+            # exported collectives match exactly by gid (subset-scoped:
+            # hybrid PP x DP per-stage rings re-wire over just their
+            # stage's workers); gid-less ones by (name, occurrence)
+            for op, ids, members in match_collective_gid_groups(graphs):
+                cg.wire_collective_group(
+                    op, [remaps[w][m.uid] for w, m in zip(ids, members)],
+                    worker_ids=ids)
             for op, members in match_collective_groups(graphs):
                 cg._wire_group(op, [remaps[i][m.uid]
                                     for i, m in enumerate(members)],
@@ -409,6 +535,13 @@ class ClusterGraph:
                 [[(remaps[w][push.uid], [remaps[w][v.uid] for v in pulls])
                   for w, (push, pulls) in enumerate(group)]
                  for group in match_push_pull_groups(graphs)])
+            # point-to-point hops (pipeline stage boundaries) re-wire from
+            # their exported provenance: the leg keeps its traced lane and
+            # regains both its cross-worker edge and its link-derived
+            # duration/retune record
+            for _, sw, leg, dw, recv in match_wired_p2p(graphs):
+                cg.wire_p2p(None, remaps[dw][recv.uid], sw, dw,
+                            leg=remaps[sw][leg.uid])
         return cg._finish()
 
     @classmethod
@@ -594,6 +727,15 @@ class ClusterGraph:
         stage template's hop, cloned by :meth:`_clone_worker` with
         ``comm_prov=False``) instead of creating one; ``payload`` defaults
         to the adopted leg's ``comm_bytes``.
+
+        Every wired hop gets round-trippable provenance: ``attrs["p2p"]``
+        (src/dst worker) plus a graph-unique ``attrs["p2p_gid"]`` on the
+        leg, mirrored in the receiver's ``attrs["p2p_in"]`` list.  Both
+        sides survive the per-worker trace export, which is what lets
+        :meth:`from_worker_graphs` re-wire imported hops
+        (:func:`match_wired_p2p`) and :mod:`repro.analysis.diff` match them
+        task-by-task — previously hops exported as plain timeline events
+        and cross-stage coupling was lost on re-import.
         """
         i, j = src_worker, dst_worker
         if payload is None:
@@ -606,11 +748,19 @@ class ClusterGraph:
             leg = self.graph.add_task(
                 Task(name=f"{name}:w{i}>w{j}", kind=TaskKind.COMM,
                      thread=worker_thread(i, p2p_channel(j)), duration=0.0,
-                     comm_bytes=payload, phase="comm",
-                     attrs={"p2p": (i, j)}), link_lane=False)
+                     comm_bytes=payload, phase="comm"), link_lane=False)
             self.graph.add_edge(src, leg)
-        else:
-            leg.attrs["p2p"] = (i, j)
+        self._gid += 1
+        # rebind (never mutate) the receiver's gid list: clone() copies
+        # attrs dicts shallowly, so in-place list edits would leak into the
+        # source graph a trace scenario re-evaluates from.  Re-wiring an
+        # imported hop retires the stale imported gid, so repeated
+        # export -> import cycles do not grow the list.
+        ins = [g for g in dst.attrs.get("p2p_in", ())
+               if g != leg.attrs.get("p2p_gid")]
+        leg.attrs["p2p"] = (i, j)
+        leg.attrs["p2p_gid"] = self._gid
+        dst.attrs["p2p_in"] = ins + [self._gid]
         leg.duration = self._p2p_duration(i, j, payload)
         self._prov.append(("p2p", leg, i, j, payload))
         self.graph.add_edge(leg, dst)
@@ -750,9 +900,12 @@ class ClusterGraph:
     def _fused_sync(self, members: List[Task]) -> None:
         """Keep one analytical/traced-duration task per worker, gated by a
         barrier so no worker's collective starts before every worker is
-        ready."""
+        ready.  Members are stamped with the group's ``coll_gid`` so the
+        exporter/importer identify the group exactly, like ring legs and
+        hierarchical stages."""
         bar = self._barrier(f"{members[0].name}:barrier")
         for rc in members:
+            rc.attrs["coll_gid"] = self._gid
             for p in self.graph.parents(rc):
                 self.graph.add_edge(p, bar)
             self.graph.add_edge(bar, rc)
@@ -863,8 +1016,10 @@ class ClusterGraph:
         return self
 
     # -------------------------------------------------------------- simulate
-    def simulate(self, schedule: Optional[ScheduleFn] = None) -> ClusterResult:
-        res = simulate(self.graph, schedule or self.schedule)
+    def simulate(self, schedule: Optional[ScheduleFn] = None, *,
+                 record_binding: bool = False) -> ClusterResult:
+        res = simulate(self.graph, schedule or self.schedule,
+                       record_binding=record_binding)
         # snapshot durations/gaps: a later retune() (sweeps) must not bleed
         # into this result's lazily-computed per-worker breakdown
         snap = {t.uid: (t.duration, t.gap) for t in self.graph.tasks()}

@@ -281,6 +281,23 @@ class Scenario:
         --export-trace``)."""
         return self._evaluate(_resolve(opt, params))
 
+    def diff_against(self, traces: Any,
+                     opt: Union[str, "Optimization"] = "noop"):
+        """Diff this scenario's predicted timeline against a captured
+        per-worker trace set, task-by-task (paper §6's validation
+        methodology as a reusable tool — see :mod:`repro.analysis.diff`).
+
+        ``traces`` is a trace directory or a pre-loaded
+        :class:`repro.traceio.ImportedCluster`; ``opt`` defaults to
+        ``"noop"`` (how faithfully does the simulator reproduce the
+        capture), and any registered stack answers "how far is reality
+        from the predicted optimized timeline".  Returns a
+        :class:`repro.analysis.TraceDiff`.
+        """
+        from repro.analysis import diff_prediction
+        pred, tf, cg = self.evaluate(opt)
+        return diff_prediction(pred, tf, cg, traces)
+
     def _evaluate(self, opt: "Optimization", *,
                   baseline: Optional[float] = None,
                   point: Optional[Dict[str, Any]] = None,
@@ -306,7 +323,8 @@ class Scenario:
                                      schedule=tfs[0].schedule)
             cres = cg.simulate()
             return (Prediction(opt, base, cres.makespan, cres.global_result,
-                               cres, point or {}), tfs[0], cg)
+                               cres, point or {}, graph=cg.graph,
+                               schedule=cg.schedule), tfs[0], cg)
         tf = opt.apply(self)
         if self.is_cluster:
             cg = ClusterGraph.build(tf.graph, self.specs, cost=self.cost,
@@ -314,9 +332,11 @@ class Scenario:
                                     schedule=tf.schedule)
             cres = cg.simulate()
             return (Prediction(opt, base, cres.makespan, cres.global_result,
-                               cres, point or {}), tf, cg)
+                               cres, point or {}, graph=cg.graph,
+                               schedule=cg.schedule), tf, cg)
         res = tf.simulate()
-        return Prediction(opt, base, res.makespan, res, None, point or {}), \
+        return Prediction(opt, base, res.makespan, res, None, point or {},
+                          graph=tf.graph, schedule=tf.schedule), \
             tf, None
 
     # ------------------------------------------------------ pipeline route
@@ -381,7 +401,8 @@ class Scenario:
         out_tf = tf if tf is not None \
             else GraphTransform(templates[0], copy=False)
         return (Prediction(opt, base, cres.makespan, cres.global_result,
-                           cres, dict(point)), out_tf, cg)
+                           cres, dict(point), graph=cg.graph,
+                           schedule=cg.schedule), out_tf, cg)
 
     def _pipeline_specs(self, plan: Any) -> List[WorkerSpec]:
         """Worker specs for a plan: the scenario's list must pair 1:1 with
@@ -452,7 +473,9 @@ class Scenario:
                 cache["cg"].retune(scn.specs)
                 cres = cache["cg"].simulate()
                 pred = Prediction(popt, base, cres.makespan,
-                                  cres.global_result, cres, dict(pt))
+                                  cres.global_result, cres, dict(pt),
+                                  graph=cache["cg"].graph,
+                                  schedule=cache["cg"].schedule)
                 cache["opt"], cache["scn"] = popt, scn
             elif reuse and cache["tf"] is not None and not over \
                     and scn is self and not scn.is_cluster \
@@ -460,7 +483,8 @@ class Scenario:
                     and popt.retune(scn, cache["tf"], cache["opt"]):
                 res = simulate(cache["tf"].graph, cache["tf"].schedule)
                 pred = Prediction(popt, base, res.makespan, res, None,
-                                  dict(pt))
+                                  dict(pt), graph=cache["tf"].graph,
+                                  schedule=cache["tf"].schedule)
                 cache["opt"] = popt
             if pred is None:
                 pred, tf, cg = scn._evaluate(popt, baseline=base,
@@ -501,11 +525,50 @@ class Prediction:
     result: SimResult
     cluster: Optional[ClusterResult] = None
     point: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # the evaluated graph (cluster global graph on cluster routes) and its
+    # schedule override — what Prediction.critical_path walks
+    graph: Optional[DependencyGraph] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    schedule: Optional[Any] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _cp: Optional[Any] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     @property
     def speedup(self) -> float:
         return (self.baseline / self.predicted if self.predicted > 0
                 else float("inf"))
+
+    @property
+    def critical_path(self):
+        """The predicted timeline's makespan-defining chain
+        (:class:`repro.analysis.CriticalPath`), extracted lazily.
+
+        Re-simulates the evaluated graph with binding recording (same
+        engine, bit-identical timeline) on first access.  Sweeps share one
+        build and retune it in place between points, which would silently
+        yield a *different point's* path — so the extraction is checked
+        against this prediction's makespan and raises (instead of lying)
+        when the carried graph has moved on; re-evaluate the point via
+        :meth:`Scenario.predict` to diagnose it.
+        """
+        if self._cp is None:
+            if self.graph is None:
+                raise OptimizationError(
+                    "this Prediction does not carry its evaluated graph; "
+                    "re-evaluate via Scenario.predict/evaluate")
+            from repro.analysis import extract_critical_path
+            cp = extract_critical_path(self.graph, schedule=self.schedule)
+            if abs(cp.makespan - self.predicted) > \
+                    1e-9 * max(abs(self.predicted), 1e-30):
+                raise OptimizationError(
+                    f"the evaluated graph no longer reproduces this "
+                    f"prediction (makespan {cp.makespan} vs "
+                    f"{self.predicted}): a later sweep point retuned the "
+                    f"shared build in place — re-evaluate this point via "
+                    f"Scenario.predict to get its critical path")
+            self._cp = cp
+        return self._cp
 
     def __repr__(self) -> str:
         tag = f" point={self.point}" if self.point else ""
@@ -549,6 +612,42 @@ class Optimization:
         params) to this instance's params, in place.  Return ``False`` when
         the change is structural and needs a rebuild (the default)."""
         return False
+
+    # ------------------------------------------------------------ headroom
+    def headroom_targets(self, s: Scenario
+                         ) -> Optional[Callable[[Task], bool]]:
+        """Predicate over the tasks this optimization can *shrink*, or None.
+
+        The contract backing :func:`repro.analysis.opportunity`'s Amdahl
+        bounds: :meth:`build` must never make a targeted task slower, and
+        everything else it does must be added work (the makespan is
+        monotone in durations/payloads, so erasing the targets then upper-
+        bounds any real parameterization).  Return a predicate selecting
+        every task the model might speed up (``lambda t: False`` for
+        optimizations that only add or redistribute work — their bound is
+        exactly 1.0x); return ``None`` (the default) when the optimization
+        restructures the graph and no shrink-bound exists (``pipeline``).
+        """
+        return None
+
+    def headroom(self, s: Scenario, tf: GraphTransform) -> bool:
+        """Mutate ``tf`` into this optimization's idealized best case.
+
+        Default: erase the :meth:`headroom_targets` (duration *and*
+        payload to zero — a collective with zero payload still wires, as
+        hop-latency-only legs, so the bound flows through the real cluster
+        simulator).  Returns False when no bound exists.  Override when
+        the ideal case is not expressible as target-erasure (``overlap``
+        removes its targets outright — fully hidden communication also
+        frees the device lane's issue slots).
+        """
+        targets = self.headroom_targets(s)
+        if targets is None:
+            return False
+        for t in tf.select(targets):
+            t.duration = 0.0
+            t.comm_bytes = 0.0
+        return True
 
     # ---------------------------------------------------------- parameters
     def param_names(self) -> Tuple[str, ...]:
@@ -608,6 +707,18 @@ class Stack(Optimization):
     def build(self, s: Scenario, tf: GraphTransform) -> None:
         for o in self.opts:
             o.build(s, tf)
+
+    def headroom_targets(self, s: Scenario
+                         ) -> Optional[Callable[[Task], bool]]:
+        preds = [o.headroom_targets(s) for o in self.opts]
+        if any(p is None for p in preds):
+            return None
+        return lambda t: any(p(t) for p in preds)
+
+    def headroom(self, s: Scenario, tf: GraphTransform) -> bool:
+        # every member must bound; erasure composes (idempotent), so the
+        # union of the members' ideal cases is the stack's ideal case
+        return all(o.headroom(s, tf) for o in self.opts)
 
     def param_names(self) -> Tuple[str, ...]:
         return ()
@@ -811,6 +922,9 @@ class Noop(Optimization):
                old: "Optimization") -> bool:
         return True
 
+    def headroom_targets(self, s: Scenario):
+        return lambda t: False      # identity: bound is exactly 1.0x
+
 
 @register("amp", algorithm="Alg 3")
 @dataclasses.dataclass(frozen=True)
@@ -859,6 +973,10 @@ class AMP(Optimization):
                       self.memory_speedup / old.memory_speedup)
         return True
 
+    def headroom_targets(self, s: Scenario):
+        # everything _rescale divides: device tasks and p2p hop payloads
+        return lambda t: on_device(t) or t.kind == TaskKind.COMM
+
 
 @register("fused_optimizer", "fusedadam", algorithm="Alg 4")
 @dataclasses.dataclass(frozen=True)
@@ -889,6 +1007,10 @@ class FusedOptimizer(Optimization):
         for t in rest:
             tf.remove(t)
 
+    def headroom_targets(self, s: Scenario):
+        return lambda t: (on_device(t) and t.phase == "update"
+                          and t.kind != TaskKind.COLLECTIVE)
+
 
 @register("fused_norm", algorithm="Alg 5")
 @dataclasses.dataclass(frozen=True)
@@ -910,6 +1032,10 @@ class FusedNorm(Optimization):
         for t in tf.select(all_of(on_device, by_layer(self.norm_layer))):
             if t.kind != TaskKind.COLLECTIVE:
                 t.duration /= self.norm_speedup
+
+    def headroom_targets(self, s: Scenario):
+        sel = all_of(on_device, by_layer(self.norm_layer))
+        return lambda t: sel(t) and t.kind != TaskKind.COLLECTIVE
 
 
 @register("ddp", "distributed", algorithm="Alg 6")
@@ -977,6 +1103,11 @@ class DDP(Optimization):
                             if lane_pos[t.uid] > after), tail)
             children = [x for x in (barrier,) if x is not None]
             tf.append(ar, parents=parents, children=children)
+
+    def headroom_targets(self, s: Scenario):
+        # pure insertion: DP communication only ever adds to a
+        # single-worker baseline, so the bound is exactly 1.0x
+        return lambda t: False
 
 
 def extend_next_forward(tf: GraphTransform) -> Dict[str, Task]:
@@ -1076,6 +1207,9 @@ class P3(Optimization):
         if self.priority:
             tf.prioritize(lambda t: t.attrs.get("priority", -1e9))
 
+    def headroom_targets(self, s: Scenario):
+        return lambda t: False      # insertion-only vs the baseline
+
 
 @register("blueconnect", algorithm="Alg 8")
 @dataclasses.dataclass(frozen=True)
@@ -1137,6 +1271,10 @@ class BlueConnect(Optimization):
                 tf.graph.add_edge(prev[0], c)
             tf.remove(u)
 
+    def headroom_targets(self, s: Scenario):
+        return lambda t: (t.kind == TaskKind.COLLECTIVE and
+                          t.attrs.get("collective") == "all-reduce")
+
 
 @register("remove_layer", algorithm="Alg 9")
 @dataclasses.dataclass(frozen=True)
@@ -1147,6 +1285,9 @@ class RemoveLayer(Optimization):
 
     def build(self, s: Scenario, tf: GraphTransform) -> None:
         tf.remove(all_of(on_device, by_layer(self.layer_pattern)))
+
+    def headroom_targets(self, s: Scenario):
+        return all_of(on_device, by_layer(self.layer_pattern))
 
 
 @register("scale_layer", algorithm="Alg 9")
@@ -1167,6 +1308,10 @@ class ScaleLayer(Optimization):
         tf.scale(all_of(on_device, by_layer(self.layer_pattern)),
                  self.scale / old.scale)
         return True
+
+    def headroom_targets(self, s: Scenario):
+        # scale > 1 only slows the targets; erasure still upper-bounds it
+        return all_of(on_device, by_layer(self.layer_pattern))
 
 
 def _layer_anchors(graph: DependencyGraph, layer_pattern: str
@@ -1223,6 +1368,9 @@ class Offload(Optimization):
             parents = [off] + ([trigger] if trigger_idx != i else [])
             tf.append(pre, parents=parents, children=[bwd_first[layer]])
 
+    def headroom_targets(self, s: Scenario):
+        return lambda t: False      # trades time for memory, never faster
+
 
 @register("gist", algorithm="Alg 11")
 @dataclasses.dataclass(frozen=True)
@@ -1254,6 +1402,9 @@ class Gist(Optimization):
                            duration=cost.compute_time(nbytes, traffic),
                            phase="bwd")
                 tf.insert_before(bwd_first[layer], dec, extra_parents=[enc])
+
+    def headroom_targets(self, s: Scenario):
+        return lambda t: False      # codec insertion only adds device work
 
 
 @register("dgc", algorithm="Alg 12")
@@ -1361,6 +1512,10 @@ class DGC(Optimization):
                     continue   # lane-earlier consumer: order kept by the lane
                 tf.graph.add_edge(dec, c)
 
+    def headroom_targets(self, s: Scenario):
+        return lambda t: (t.kind == TaskKind.COLLECTIVE and
+                          t.attrs.get("collective") in self._TARGET_OPS)
+
 
 @register("zero", algorithm="beyond-paper")
 @dataclasses.dataclass(frozen=True)
@@ -1396,6 +1551,13 @@ class ZeRO(Optimization):
             tf.append(ag, parents=[u], children=children)
         tf.scale(all_of(on_device, by_phase("update")), 1.0 / num_workers)
 
+    def headroom_targets(self, s: Scenario):
+        # shrinks the sharded update and rewrites gradient all-reduces
+        # (reduce-scatter + all-gather together never beat zero comm)
+        return lambda t: ((t.kind == TaskKind.COLLECTIVE and
+                           t.attrs.get("collective") == "all-reduce")
+                          or (on_device(t) and t.phase == "update"))
+
 
 @register("overlap", "overlap_collectives", algorithm="beyond-paper")
 @dataclasses.dataclass(frozen=True)
@@ -1420,6 +1582,17 @@ class OverlapCollectives(Optimization):
                 for c in children:
                     if nt.uid != c.uid and c in g:
                         g.add_edge(nt, c)
+
+    def headroom_targets(self, s: Scenario):
+        return lambda t: (on_device(t) and t.kind == TaskKind.COLLECTIVE)
+
+    def headroom(self, s: Scenario, tf: GraphTransform) -> bool:
+        # fully hidden communication also frees the device lane's issue
+        # slot, which erasure-in-place cannot express: the best case is the
+        # collective gone from the lane entirely (bridged, like build does)
+        for t in tf.select(self.headroom_targets(s)):
+            tf.graph.remove_task(t, bridge=True)
+        return True
 
 
 @register("straggler", algorithm="beyond-paper")
@@ -1462,6 +1635,9 @@ class Straggler(Optimization):
             t.duration += per_new - per_old
         return True
 
+    def headroom_targets(self, s: Scenario):
+        return lambda t: False      # a straggler only ever slows the job
+
 
 @register("bandwidth", algorithm="beyond-paper")
 @dataclasses.dataclass(frozen=True)
@@ -1485,6 +1661,9 @@ class Bandwidth(Optimization):
         tf.scale(lambda t: t.is_comm(), old.factor / self.factor)
         return True
 
+    def headroom_targets(self, s: Scenario):
+        return lambda t: t.is_comm()    # infinite bandwidth == free comm
+
 
 @register("grad_accum", algorithm="beyond-paper")
 @dataclasses.dataclass(frozen=True)
@@ -1499,6 +1678,9 @@ class GradAccum(Optimization):
                  float(self.microbatches))
         tf.scale(all_of(on_device, by_phase("bwd")),
                  float(self.microbatches))
+
+    def headroom_targets(self, s: Scenario):
+        return lambda t: False      # repeats fwd/bwd, never shrinks them
 
 
 @register("pipeline", "pp", algorithm="beyond-paper")
@@ -1591,7 +1773,8 @@ def default_candidates(scenario: Scenario) -> List[Optimization]:
 
 
 def greedy_search(scenario: Scenario, *, max_depth: int = 3,
-                  candidates: Optional[Sequence[Optimization]] = None
+                  candidates: Optional[Sequence[Optimization]] = None,
+                  round1: Optional[Dict[int, Prediction]] = None
                   ) -> Tuple[Optional[Optimization], List[Prediction]]:
     """Greedy hill-climb over the registry: repeatedly stack whichever
     candidate most reduces the predicted makespan, until no candidate
@@ -1599,7 +1782,12 @@ def greedy_search(scenario: Scenario, *, max_depth: int = 3,
 
     Candidates that do not apply to the scenario (missing byte maps, no
     collectives to transform, ...) are skipped, so the search runs on any
-    scenario.  Returns ``(best stack or None, per-round best predictions)``.
+    scenario.  ``round1`` optionally seeds the first round with already-
+    evaluated depth-1 predictions keyed by ``id(candidate)`` — the
+    opportunity-ranking pass realizes every candidate anyway
+    (:func:`repro.analysis.rank_opportunities`), and re-simulating them
+    would double the most expensive stage.  Returns ``(best stack or
+    None, per-round best predictions)``.
     """
     cands = list(candidates) if candidates is not None \
         else default_candidates(scenario)
@@ -1612,8 +1800,12 @@ def greedy_search(scenario: Scenario, *, max_depth: int = 3,
             if any(type(cand) is type(o) for o in chosen):
                 continue
             try:
-                pred = scenario.predict(Stack(*chosen, cand) if chosen
-                                        else cand)
+                if not chosen and round1 is not None \
+                        and id(cand) in round1:
+                    pred = round1[id(cand)]
+                else:
+                    pred = scenario.predict(Stack(*chosen, cand) if chosen
+                                            else cand)
             except Exception:
                 continue      # not applicable to this scenario
             if pred.predicted < (round_best.predicted if round_best

@@ -83,6 +83,32 @@ class SimResult:
     finish: Dict[int, float]                 # uid -> start + duration (no gap)
     thread_busy: Dict[str, float]            # per-thread busy seconds
     breakdown: Dict[str, float]              # paper Fig.6: host-only / device-only / parallel
+    _binding: Optional[Dict[int, Optional[int]]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
+    _binding_fn: Optional[Callable[[], Dict[int, Optional[int]]]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
+
+    @property
+    def binding(self) -> Optional[Dict[int, Optional[int]]]:
+        """uid -> uid of the *binding predecessor* (the task whose
+        completion set this task's effective start: the lane predecessor
+        when the thread was the constraint, the last-finishing dependency
+        otherwise; None for tasks that started at t=0).
+
+        Available only from ``simulate(record_binding=True)`` —
+        :mod:`repro.analysis` walks it to extract the makespan-defining
+        critical path.  Materialized lazily on first access (the
+        ``ClusterResult.per_worker`` pattern): the engine's hot loop only
+        stores one conditional observation per released edge, and the
+        O(V log V) map derivation runs here, outside the simulation —
+        which is what keeps the instrumented run within the
+        ``bench_sim.py`` 10% gate.
+        """
+        if self._binding is None and self._binding_fn is not None:
+            self._binding = self._binding_fn()
+            # drop the closure: it pins the engine's O(V) working dicts
+            self._binding_fn = None
+        return self._binding
 
     def speedup_over(self, other: "SimResult") -> float:
         return other.makespan / self.makespan if self.makespan > 0 else float("inf")
@@ -139,7 +165,9 @@ def _host_device_breakdown(busy_intervals: Dict[str, List[Tuple[float, float]]],
 def _assemble(graph: DependencyGraph, executed: int,
               progress: Dict[str, float], start: Dict[int, float],
               finish: Dict[int, float], busy: Dict[str, float],
-              busy_intervals: Dict[str, List[Tuple[float, float]]]) -> SimResult:
+              busy_intervals: Dict[str, List[Tuple[float, float]]],
+              binding_fn: Optional[Callable[[], Dict[int, Optional[int]]]]
+              = None) -> SimResult:
     if executed != len(graph):
         raise RuntimeError(
             f"simulation deadlock: executed {executed}/{len(graph)} tasks (cycle?)")
@@ -147,10 +175,59 @@ def _assemble(graph: DependencyGraph, executed: int,
     breakdown = _host_device_breakdown(busy_intervals, makespan,
                                        lambda th: th == HOST_THREAD)
     return SimResult(makespan=makespan, start=start, finish=finish,
-                     thread_busy=dict(busy), breakdown=breakdown)
+                     thread_busy=dict(busy), breakdown=breakdown,
+                     _binding_fn=binding_fn)
 
 
-def simulate(graph: DependencyGraph, schedule: Optional[ScheduleFn] = None) -> SimResult:
+def _derive_binding(by_uid: Dict[int, Task], start: Dict[int, float],
+                    finish: Dict[int, float], earliest: Dict[int, float],
+                    dep_binder: Dict[int, int]) -> Dict[int, Optional[int]]:
+    """Binding predecessors, derived *after* the simulation loop.
+
+    A task's effective start is ``max(thread progress, dependency-ready)``.
+    When the thread was the constraint (``start > earliest``) the binder is
+    the thread task that completed (``finish + gap``) exactly at our start;
+    otherwise the dependency that last raised the ready time
+    (``dep_binder``, the only thing the hot loop records), or None for a
+    t=0 start.
+
+    Per-thread execution order is recovered by sorting on ``(start, uid)``:
+    thread progress is monotone, so start order matches execution order
+    except among same-instant ties, where the backward scan for the exact
+    completion time picks the true constraint (completion times here are
+    bitwise reproductions of the progress values the engine compared
+    against, so ``==`` is the right test).  The scan is bounded by the
+    same-instant run plus one earlier-start task — tasks with a strictly
+    earlier start all executed before us, so the first one reached is the
+    latest of them.
+    """
+    lanes: Dict[str, List[Tuple[float, int]]] = collections.defaultdict(list)
+    for uid, s in start.items():
+        lanes[by_uid[uid].thread].append((s, uid))
+    binding: Dict[int, Optional[int]] = {}
+    get_dep = dep_binder.get
+    for lane in lanes.values():
+        lane.sort()
+        for i, (s, u) in enumerate(lane):
+            if s <= earliest[u]:
+                binding[u] = get_dep(u)
+                continue
+            b = lane[i - 1][1] if i > 0 else None
+            j = i - 1
+            while j >= 0:
+                sc, c = lane[j]
+                if finish[c] + by_uid[c].gap == s:
+                    b = c
+                    break
+                if sc < s:
+                    break
+                j -= 1
+            binding[u] = b
+    return binding
+
+
+def simulate(graph: DependencyGraph, schedule: Optional[ScheduleFn] = None,
+             *, record_binding: bool = False) -> SimResult:
     """Event-driven engine (default): paper Algorithm 1 semantics in O(E log V).
 
     Ready tasks sit in a min-heap keyed by ``(effective start, ready time,
@@ -160,6 +237,17 @@ def simulate(graph: DependencyGraph, schedule: Optional[ScheduleFn] = None) -> S
     supplied, every entry within ``SCHED_EPS`` of the minimum is popped and
     handed to the policy — the same candidate set the legacy loop's built-in
     policies select from — and the losers are re-pushed.
+
+    ``record_binding=True`` additionally makes :attr:`SimResult.binding`
+    available — each task's binding predecessor, what
+    :mod:`repro.analysis` walks for critical paths.  The recording is
+    designed to be free when off (the child-release loop is duplicated so
+    the disabled path runs the byte-identical original body) and cheap
+    when on: the hot loop stores exactly one observation per released edge
+    that raises a ready time (``dep_binder``), and the full binding map is
+    derived lazily on first ``.binding`` access (:func:`_derive_binding`).
+    ``benchmarks/bench_sim.py`` gates the instrumented run within 10% of
+    the plain run.
     """
     # direct adjacency access (uid sets) — the engine is the hottest loop in
     # the system and per-call Task-list materialization doubles its cost
@@ -183,6 +271,7 @@ def simulate(graph: DependencyGraph, schedule: Optional[ScheduleFn] = None) -> S
     busy: Dict[str, float] = collections.defaultdict(float)
     busy_intervals: Dict[str, List[Tuple[float, float]]] = collections.defaultdict(list)
     executed = 0
+    dep_binder: Dict[int, int] = {}
 
     heappush, heappop = heapq.heappush, heapq.heappop
     while heap:
@@ -229,22 +318,38 @@ def simulate(graph: DependencyGraph, schedule: Optional[ScheduleFn] = None) -> S
             busy_intervals[th].append((s, end))
         executed += 1
         if uu in children_of:
-            for cuid in children_of[uu]:
-                r = ref[cuid] - 1
-                ref[cuid] = r
-                if earliest[cuid] < done:
-                    earliest[cuid] = done
-                if r == 0:
-                    ec = earliest[cuid]
-                    pc = progress[by_uid[cuid].thread]
-                    heappush(heap, (pc if pc > ec else ec, ec, cuid))
+            if not record_binding:
+                for cuid in children_of[uu]:
+                    r = ref[cuid] - 1
+                    ref[cuid] = r
+                    if earliest[cuid] < done:
+                        earliest[cuid] = done
+                    if r == 0:
+                        ec = earliest[cuid]
+                        pc = progress[by_uid[cuid].thread]
+                        heappush(heap, (pc if pc > ec else ec, ec, cuid))
+            else:
+                for cuid in children_of[uu]:
+                    r = ref[cuid] - 1
+                    ref[cuid] = r
+                    if earliest[cuid] < done:
+                        earliest[cuid] = done
+                        dep_binder[cuid] = uu
+                    if r == 0:
+                        ec = earliest[cuid]
+                        pc = progress[by_uid[cuid].thread]
+                        heappush(heap, (pc if pc > ec else ec, ec, cuid))
 
+    binding_fn = (lambda: _derive_binding(by_uid, start, finish, earliest,
+                                          dep_binder)) \
+        if record_binding else None
     return _assemble(graph, executed, progress, start, finish, busy,
-                     busy_intervals)
+                     busy_intervals, binding_fn)
 
 
 def simulate_reference(graph: DependencyGraph,
-                       schedule: Optional[ScheduleFn] = None) -> SimResult:
+                       schedule: Optional[ScheduleFn] = None,
+                       *, record_binding: bool = False) -> SimResult:
     """Legacy frontier-scan loop (paper Algorithm 1 verbatim) — the oracle.
 
     Maintains the frontier ``F`` of dependency-ready tasks and per-thread
@@ -271,6 +376,7 @@ def simulate_reference(graph: DependencyGraph,
     busy: Dict[str, float] = collections.defaultdict(float)
     busy_intervals: Dict[str, List[Tuple[float, float]]] = collections.defaultdict(list)
     executed = 0
+    dep_binder: Dict[int, int] = {}
 
     while frontier:
         u = sched(frontier, progress, earliest)
@@ -288,9 +394,15 @@ def simulate_reference(graph: DependencyGraph,
         done = end + u.gap
         for c in graph.children(u):
             ref[c.uid] -= 1
-            earliest[c.uid] = max(earliest[c.uid], done)
+            if earliest[c.uid] < done:
+                earliest[c.uid] = done
+                if record_binding:
+                    dep_binder[c.uid] = u.uid
             if ref[c.uid] == 0:
                 frontier.append(c)
 
+    binding_fn = (lambda: _derive_binding(
+        {t.uid: t for t in graph.tasks()}, start, finish, earliest,
+        dep_binder)) if record_binding else None
     return _assemble(graph, executed, progress, start, finish, busy,
-                     busy_intervals)
+                     busy_intervals, binding_fn)

@@ -13,6 +13,12 @@ best-stack-so-far grows one optimization per round (at most N) while the
 predicted makespan keeps dropping.  Extra candidates with parameters come
 from repeatable ``--candidate name:param=value`` specs.
 
+Before searching, the driver prints the opportunity-ranking table
+(repro.analysis: per-candidate Amdahl speedup bound through the real
+simulator, critical-path share, and the realized depth-1 speedup), orders
+the search best-headroom-first, and skips candidates whose bound proves
+they cannot improve the scenario — the table says which and why.
+
     PYTHONPATH=src python -m repro.launch.hillclimb --arch tinyllama-1.1b \
         --shape train_4k --tag whatif3 --search-whatif 3 \
         --candidate dgc:compression=0.01
@@ -68,11 +74,30 @@ def search_whatif(args, cfg) -> None:
             raise SystemExit(f"--candidate {spec!r}: scenario overrides "
                              f"belong in --cluster/--straggler")
         candidates.append(opt)
+
+    # rank by Amdahl-style headroom bounds first (repro.analysis): greedy
+    # search then tries high-headroom candidates first, provably-hopeless
+    # ones (bound <= 1x) are skipped, and the table shows why
+    from repro.analysis import (format_opportunity_table, rank_opportunities,
+                                searchable_candidates)
+    opps = rank_opportunities(scenario, candidates, realize=True)
+    print(format_opportunity_table(opps, title="what-if search ordering"))
+    searchable = searchable_candidates(opps)
+    skipped = [o for o in opps if o.skipped]
+    if skipped:
+        print(f"skipping {len(skipped)} candidate(s) whose bound proves no "
+              f"improvement on this scenario")
+
+    # the ranking already realized every candidate at depth 1: seed the
+    # first greedy round with those predictions instead of re-simulating
+    round1 = {id(o.optimization): o.prediction
+              for o in opps if o.prediction is not None}
     best, trail = greedy_search(scenario, max_depth=args.search_whatif,
-                                candidates=candidates)
+                                candidates=searchable, round1=round1)
     base = scenario.baseline().makespan
-    print(f"baseline: {base*1e3:.3f} ms; searched {len(candidates)} "
-          f"registry candidates to depth {args.search_whatif}")
+    print(f"baseline: {base*1e3:.3f} ms; searched {len(searchable)} of "
+          f"{len(candidates)} registry candidates to depth "
+          f"{args.search_whatif}")
     for i, pred in enumerate(trail):
         print(f"round {i+1}: {pred.optimization.spec():60s} "
               f"{pred.predicted*1e3:10.3f} ms  ({pred.speedup:.2f}x)")
@@ -82,6 +107,12 @@ def search_whatif(args, cfg) -> None:
            "status": "ok", "mode": "whatif_search",
            "baseline_ms": base * 1e3,
            "best_stack": best.spec() if best is not None else None,
+           "opportunities": [
+               {"candidate": o.optimization.spec(),
+                "bound": None if o.unbounded else o.bound,
+                "cp_share": o.cp_share, "realized": o.realized,
+                "skipped": o.skipped,
+                "error": o.error or None} for o in opps],
            "trail": [{"stack": p.optimization.spec(),
                       "predicted_ms": p.predicted * 1e3,
                       "speedup": p.speedup} for p in trail]}

@@ -183,7 +183,8 @@ def build_scenario(module, cfg, cost, *, workers=1, straggler: str = ""):
 
 
 def cluster_whatif_report(module, cfg, cost, *, workers: int,
-                          straggler: str = "") -> str:
+                          straggler: str = "",
+                          critical_path: bool = False) -> str:
     """Cluster-simulate the compiled step across ``workers`` replicas."""
     # validate the straggler spec before the (expensive) graph extraction
     if straggler:
@@ -191,7 +192,11 @@ def cluster_whatif_report(module, cfg, cost, *, workers: int,
     from repro.core.optimize import DDP
     scenario, title = build_scenario(module, cfg, cost, workers=workers,
                                      straggler=straggler)
-    return format_cluster_report(scenario.predict(DDP()).cluster, title=title)
+    pred = scenario.predict(DDP())
+    out = format_cluster_report(pred.cluster, title=title)
+    if critical_path:
+        out += "\n" + pred.critical_path.format()
+    return out
 
 
 def export_prediction(pred, tf, cg, dest: str) -> str:
@@ -202,16 +207,10 @@ def export_prediction(pred, tf, cg, dest: str) -> str:
     """
     from repro import traceio
     if cg is not None:
+        # collectives (coll_gid) and point-to-point hops (p2p provenance)
+        # both round-trip through --trace-dir re-import, pipeline
+        # placements included
         paths = traceio.export_cluster_traces(cg, pred.cluster, dest)
-        if any(t.kind == TaskKind.COMM for t in cg.graph.tasks()):
-            # pipeline placements: the per-worker export keeps every hop
-            # leg's timeline, but the importer only re-wires *collectives*
-            # (matched by name across workers) — point-to-point cross-stage
-            # coupling cannot round-trip, so don't advertise it
-            return (f"exported {len(paths)} per-worker Chrome traces to "
-                    f"{dest}/ (open in https://ui.perfetto.dev; NOTE: "
-                    f"point-to-point pipeline hops do not survive "
-                    f"--trace-dir re-import — timelines only)")
         return (f"exported {len(paths)} per-worker Chrome traces to "
                 f"{dest}/ (open in https://ui.perfetto.dev; re-import with "
                 f"--trace-dir)")
@@ -225,7 +224,8 @@ def export_prediction(pred, tf, cg, dest: str) -> str:
 
 
 def whatif_stack_report(module, cfg, cost, spec: str, *, workers: int = 0,
-                        straggler: str = "", export_trace: str = "") -> str:
+                        straggler: str = "", export_trace: str = "",
+                        critical_path: bool = False) -> str:
     """Evaluate a registry-parsed optimization stack on the compiled step.
 
     ``spec`` is the CLI form parsed against the optimization registry, e.g.
@@ -260,9 +260,50 @@ def whatif_stack_report(module, cfg, cost, spec: str, *, workers: int = 0,
     if pred.cluster is not None:
         lines.append(format_cluster_report(
             pred.cluster, title=title or f"cluster x{len(pred.cluster.workers)}"))
+    if critical_path:
+        lines.append(pred.critical_path.format())
     if export_trace:
         lines.append(export_prediction(pred, tf, cg, export_trace))
     return "\n".join(lines)
+
+
+def load_trace_scenario(trace_dir: str, straggler: str = ""):
+    """Import a per-worker trace dir into a ready-to-diagnose Scenario.
+
+    Prints the per-worker import summary (event counts, clock fits, start
+    skews), derives gradient payloads for insertion-style what-ifs
+    (ddp/zero on a trace without collectives: traced collective payload
+    split over the traced backward layers), and layers an optional
+    ``IDX:SLOWDOWN`` straggler spec on top of the traced speeds.  Shared
+    by ``perf_report --trace-dir`` and ``repro.launch.diagnose``; returns
+    ``(ImportedCluster, Scenario)``.
+    """
+    from repro import traceio
+    from repro.core.optimize import Scenario
+    imp = traceio.load_trace_dir(trace_dir)
+    n = imp.num_workers
+    print(f"== imported {n} worker trace(s) from {trace_dir} ==")
+    for i, al in enumerate(imp.alignments):
+        print(f"w{i}: {len(imp.traces[i].events)} events, clock "
+              f"scale={al.scale:.6f} offset={al.offset*1e3:+.3f}ms "
+              f"({al.anchors} anchors), start skew "
+              f"{imp.start_skews[i]*1e3:.3f}ms")
+
+    g0 = imp.graphs[0]
+    layers = sorted({t.layer for t in g0.tasks()
+                     if t.layer and t.phase == "bwd"})
+    total = sum(t.comm_bytes for t in g0.tasks()
+                if t.attrs.get("collective"))
+    grads = {l: total / len(layers) for l in layers} \
+        if layers and total else None
+
+    workers = None
+    if straggler:
+        idx, slow = _parse_straggler(straggler, n)
+        workers = [WorkerSpec(compute_scale=slow if i == idx else 1.0)
+                   for i in range(n)]
+    return imp, Scenario(traces=imp, layer_grad_bytes=grads,
+                         workers=workers if workers is not None else 1)
 
 
 def trace_report(args) -> None:
@@ -275,35 +316,8 @@ def trace_report(args) -> None:
             --trace-dir traces/ --what-if 'amp,bandwidth:factor=2' \\
             --export-trace predicted/
     """
-    from repro import traceio
-    from repro.core.optimize import Scenario
-    imp = traceio.load_trace_dir(args.trace_dir)
+    imp, scenario = load_trace_scenario(args.trace_dir, args.straggler)
     n = imp.num_workers
-    print(f"== imported {n} worker trace(s) from {args.trace_dir} ==")
-    for i, al in enumerate(imp.alignments):
-        print(f"w{i}: {len(imp.traces[i].events)} events, clock "
-              f"scale={al.scale:.6f} offset={al.offset*1e3:+.3f}ms "
-              f"({al.anchors} anchors), start skew "
-              f"{imp.start_skews[i]*1e3:.3f}ms")
-
-    # gradient payloads for insertion-style what-ifs (ddp/zero on a trace
-    # without collectives): traced collective payload split over the traced
-    # backward layers
-    g0 = imp.graphs[0]
-    layers = sorted({t.layer for t in g0.tasks()
-                     if t.layer and t.phase == "bwd"})
-    total = sum(t.comm_bytes for t in g0.tasks()
-                if t.attrs.get("collective"))
-    grads = {l: total / len(layers) for l in layers} \
-        if layers and total else None
-
-    workers = None
-    if args.straggler:
-        idx, slow = _parse_straggler(args.straggler, n)
-        workers = [WorkerSpec(compute_scale=slow if i == idx else 1.0)
-                   for i in range(n)]
-    scenario = Scenario(traces=imp, layer_grad_bytes=grads,
-                        workers=workers if workers is not None else 1)
     spec = args.what_if or "noop"
     pred, tf, cg = scenario.evaluate(spec)
     if args.what_if:
@@ -313,6 +327,8 @@ def trace_report(args) -> None:
               f"({pred.speedup:.2f}x)")
     print(format_cluster_report(pred.cluster,
                                 title=f"imported cluster x{n}"))
+    if args.critical_path:
+        print(pred.critical_path.format())
     if args.export_trace:
         print(export_prediction(pred, tf, cg, args.export_trace))
 
@@ -344,6 +360,12 @@ def main() -> None:
     ap.add_argument("--export-trace", default="", dest="export_trace",
                     help="write the predicted timeline as Chrome trace JSON "
                          "(per-worker files on cluster routes) for Perfetto")
+    ap.add_argument("--critical-path", action="store_true",
+                    dest="critical_path",
+                    help="print the predicted timeline's makespan-defining "
+                         "chain with compute/comm/host/idle attribution "
+                         "(repro.analysis; composes with --what-if, "
+                         "--cluster, and --trace-dir)")
     args = ap.parse_args()
 
     if args.trace_dir:
@@ -388,7 +410,8 @@ def main() -> None:
         print(whatif_stack_report(module, cfg, cost, args.what_if,
                                   workers=args.cluster,
                                   straggler=args.straggler,
-                                  export_trace=args.export_trace))
+                                  export_trace=args.export_trace,
+                                  critical_path=args.critical_path))
     elif args.cluster:
         if args.export_trace:
             # one evaluation feeds both the report and the export
@@ -397,15 +420,21 @@ def main() -> None:
                                              straggler=args.straggler)
             pred, tf, cg = scenario.evaluate("ddp")
             print(format_cluster_report(pred.cluster, title=title))
+            if args.critical_path:
+                print(pred.critical_path.format())
             print(export_prediction(pred, tf, cg, args.export_trace))
         else:
             print(cluster_whatif_report(module, cfg, cost,
                                         workers=args.cluster,
-                                        straggler=args.straggler))
-    elif args.export_trace:
+                                        straggler=args.straggler,
+                                        critical_path=args.critical_path))
+    elif args.export_trace or args.critical_path:
         scenario, _ = build_scenario(module, cfg, cost)
-        print(export_prediction(*scenario.evaluate("noop"),
-                                args.export_trace))
+        pred, tf, cg = scenario.evaluate("noop")
+        if args.critical_path:
+            print(pred.critical_path.format())
+        if args.export_trace:
+            print(export_prediction(pred, tf, cg, args.export_trace))
     print(f"attention-loop bytes replaced: {tot['attn_bytes']/1e9:.1f} GB "
           f"-> flash kernel {fb/1e9:.2f} GB per device")
     os.makedirs(args.out, exist_ok=True)

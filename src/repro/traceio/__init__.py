@@ -38,7 +38,8 @@ DIR [--what-if STACK] [--export-trace OUT]`` is the CLI form.
 from .events import (TraceEvent, TraceImportError, WorkerTrace, classify,
                      infer_collective, read_jsonl, write_jsonl)
 from .chrome import (chrome_trace_dict, events_from_graph,
-                     export_cluster_traces, export_graph_trace, read_chrome)
+                     export_cluster_traces, export_graph_trace,
+                     predicted_worker_events, read_chrome)
 from .align import (ClockAlignment, align_traces, apply_alignment,
                     collective_end_anchors)
 from .importer import (ImportedCluster, find_worker_files, graph_from_events,
@@ -49,7 +50,7 @@ __all__ = [
     "TraceEvent", "TraceImportError", "WorkerTrace",
     "classify", "infer_collective", "read_jsonl", "write_jsonl",
     "chrome_trace_dict", "events_from_graph", "export_cluster_traces",
-    "export_graph_trace", "read_chrome",
+    "export_graph_trace", "predicted_worker_events", "read_chrome",
     "ClockAlignment", "align_traces", "apply_alignment",
     "collective_end_anchors",
     "ImportedCluster", "find_worker_files", "graph_from_events",

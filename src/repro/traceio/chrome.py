@@ -40,7 +40,14 @@ collective structures (ring legs / hierarchical stages, tagged with
 event spanning first-leg start to last-leg finish, exactly what a real
 per-worker profiler would have captured.  Cross-worker edges are dropped —
 each file stands alone, which is what makes the export → import round trip
-a real test of trace *matching* rather than graph serialization.
+a real test of trace *matching* rather than graph serialization.  What
+does survive is *provenance*: collapsed collectives carry their
+``coll_gid``, and point-to-point hop legs carry ``args.p2p`` (src/dst
+worker) plus the ``p2p_gid`` mirrored in the receiver's ``p2p_in`` — which
+is how re-import (:func:`repro.core.cluster.match_wired_p2p`) re-wires
+pipeline stage boundaries and :mod:`repro.analysis.diff` matches hops
+task-by-task.  :func:`predicted_worker_events` exposes the collapsed
+per-worker timelines without writing files.
 """
 
 from __future__ import annotations
@@ -52,6 +59,7 @@ import os
 import re
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.cluster import _RING_ROUNDS
 from repro.core.graph import DependencyGraph
 from repro.core.simulate import SimResult, simulate
 from repro.core.task import Task, TaskKind, split_worker_thread, _json_safe
@@ -312,6 +320,41 @@ def export_graph_trace(graph: DependencyGraph,
 
 
 # ------------------------------------------------- cluster per-worker export
+def predicted_worker_events(cluster_graph, result
+                            ) -> List[List[TraceEvent]]:
+    """Per-worker predicted timelines, exactly as the cluster exporter
+    writes them.
+
+    ``result`` is a :class:`~repro.core.cluster.ClusterResult` (or its
+    global :class:`~repro.core.simulate.SimResult`).  One event list per
+    worker: ordinary tasks as-is, wired collective structures collapsed
+    back into one per-worker event carrying its ``coll_gid``, p2p hop legs
+    with their ``p2p``/``p2p_gid`` provenance, thread names localized.
+    This is the *predicted* side of :mod:`repro.analysis.diff` — diffing
+    against a captured trace compares like with like, because both sides
+    are per-worker profiler-shaped timelines.
+
+    Raises when ``result`` no longer matches the graph's durations (a
+    sweep retuned the shared build in place after this result was
+    simulated): events would otherwise silently mix one point's
+    timestamps with another point's durations.
+    """
+    res = getattr(result, "global_result", result)
+    for t in cluster_graph.graph.tasks():
+        # (start + duration) - start re-rounds, so compare with a float-
+        # noise tolerance far below any real retune delta
+        tol = 1e-12 * (abs(res.finish[t.uid]) + abs(t.duration)) + 1e-18
+        if abs((res.finish[t.uid] - res.start[t.uid]) - t.duration) > tol:
+            raise ValueError(
+                f"simulation result is stale for task {t.name!r}: the "
+                f"cluster graph was retuned after this result was "
+                f"produced (sweep reuse shares one build) — re-simulate "
+                f"before exporting or diffing")
+    partition = cluster_graph._worker_partition()
+    return [_collapse_worker(cluster_graph, res, i, partition.get(i, []))[0]
+            for i in range(len(cluster_graph.workers))]
+
+
 def _collective_origin(t: Task) -> Optional[str]:
     """Base collective name of a wired piece (ring leg / hierarchical
     stage), or None for ordinary tasks."""
@@ -353,13 +396,21 @@ def _collapse_worker(cluster_graph, res: SimResult,
         proto = min(pieces, key=lambda p: res.start[p.uid])
         payload = max(p.comm_bytes for p in pieces)
         if any("ring_round" in p.attrs for p in pieces):
-            payload *= n          # legs carry payload/n chunks
+            # legs carry payload/k chunks where k is the *group's* member
+            # count — a per-stage DDP ring spans a worker subset, so the
+            # cluster-wide count would inflate the payload.  k follows
+            # from the leg count: rounds = _RING_ROUNDS[op] * (k - 1).
+            mult = _RING_ROUNDS.get(proto.attrs.get("collective"), 1)
+            k = len(pieces) // mult + 1
+            payload *= k
+        else:
+            k = int(proto.attrs.get("group_size") or n)
         ev = TraceEvent(
             name=_collective_origin(proto) or proto.name,
             thread=proto.thread, ts=ts, dur=end - ts, eid=-1,
             kind=TaskKind.COLLECTIVE.value, gap=0.0, phase="comm",
             comm_bytes=payload, collective=proto.attrs.get("collective"),
-            group_size=n)
+            group_size=k, attrs={"coll_gid": gid})
         idx = len(drafts)
         drafts.append((ts, ev, [p.uid for p in pieces]))
         for p in pieces:
@@ -414,13 +465,10 @@ def export_cluster_traces(cluster_graph, result, out_dir: str, *,
     suite anchors on: a uniform cluster's re-import reproduces the
     predicted makespan.
     """
-    res = result.global_result
     os.makedirs(out_dir, exist_ok=True)
-    partition = cluster_graph._worker_partition()
     paths: List[str] = []
-    for i in range(len(cluster_graph.workers)):
-        events, _ = _collapse_worker(cluster_graph, res, i,
-                                     partition.get(i, []))
+    for i, events in enumerate(predicted_worker_events(cluster_graph,
+                                                       result)):
         trace = chrome_trace_dict(events, pid=i, process_name=f"worker{i}")
         path = os.path.join(out_dir, f"{stem}{i}.trace.json")
         with open(path, "w") as f:

@@ -53,6 +53,24 @@ class ImportedCluster:
     def num_workers(self) -> int:
         return len(self.graphs)
 
+    def first_ts(self) -> float:
+        """Earliest (aligned) timestamp across all workers — the capture's
+        time origin."""
+        return min((tr.first_ts() for tr in self.traces), default=0.0)
+
+    def worker_events(self, *, rebase: bool = True
+                      ) -> List[List["TraceEvent"]]:
+        """Per-worker aligned event streams; with ``rebase`` (default) all
+        timestamps shift so the earliest event across workers sits at t=0 —
+        the same origin a simulated timeline uses, which is what
+        :mod:`repro.analysis.diff` compares against.  Events are copies;
+        the stored traces are never mutated."""
+        t0 = self.first_ts() if rebase else 0.0
+        return [[dataclasses.replace(ev, ts=ev.ts - t0,
+                                     deps=list(ev.deps),
+                                     attrs=dict(ev.attrs))
+                 for ev in tr.events] for tr in self.traces]
+
 
 def graph_from_events(trace: WorkerTrace, *,
                       infer_gaps: str = "host") -> DependencyGraph:

@@ -14,6 +14,11 @@ Properties:
   the event stream (names/durations/deps stable).
 * **Alignment exactness**: affine clock skew on any synthetic cluster is
   recovered to numerical precision from the collective-end anchors.
+* **Alignment under noise**: with per-anchor jitter on the collective end
+  times (real captures never observe a synchronous end at exactly the
+  same instant), the least-squares fit still recovers the injected
+  offset+drift within a tolerance proportional to the noise — the
+  guarantee trace diffing (repro.analysis.diff) leans on.
 """
 
 import pytest
@@ -87,3 +92,48 @@ def test_alignment_recovers_affine_clock_skew(n, layers, offsets, drifts):
         assert al.scale == pytest.approx(1.0 / drift, rel=1e-6)
         assert al.offset == pytest.approx(-off / drift, rel=1e-6,
                                           abs=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 5), layers=st.integers(6, 12),
+       offsets=st.lists(st.floats(-1.0, 1.0), min_size=5, max_size=5),
+       drifts=st.lists(st.floats(0.98, 1.02), min_size=5, max_size=5),
+       noise_us=st.floats(0.1, 20.0), seed=st.integers(0, 2**31))
+def test_alignment_recovers_skew_under_anchor_noise(n, layers, offsets,
+                                                    drifts, noise_us, seed):
+    """Injected per-worker offset+drift is recovered within a tolerance
+    proportional to the anchor jitter.  Each collective end observation is
+    perturbed by bounded noise (scaled into the worker's local clock);
+    the least-squares fit must land within a few noise-widths of the
+    injected affine map — previously this was only exercised indirectly
+    via exact round-trip tests.
+    """
+    import random
+    rng = random.Random(seed)
+    off = [0.0] + offsets[1:n]
+    dr = [1.0] + drifts[1:n]
+    traces = synthetic_cluster_traces(
+        n, layers=layers, clock_offsets=off, clock_drifts=dr)
+    noise = noise_us * 1e-6
+    for w, tr in enumerate(traces):
+        if w == 0:
+            continue            # keep the reference timeline clean
+        for ev in tr.events:
+            if ev.resolved_collective():
+                # jitter the observed *end* via the duration, in the
+                # worker's local clock units (ts stamps already drifted)
+                ev.dur += rng.uniform(-noise, noise) * dr[w]
+    aligns = align_traces(traces)
+    # a least-squares fit over k anchors with bounded noise b keeps the
+    # offset within a few b; the drift error is b / anchor-time-spread
+    for w, (al, o, d) in enumerate(zip(aligns, off, dr)):
+        if w == 0:
+            continue
+        assert al.anchors == layers
+        span = 4e-3 * layers      # bwd spacing lower-bounds anchor spread
+        assert al.scale == pytest.approx(1.0 / d,
+                                         abs=8 * noise / (d * span))
+        recovered_offset_at_t0 = al.offset - (-o / d)
+        assert abs(recovered_offset_at_t0) <= 8 * noise / d + \
+            abs(al.scale - 1.0 / d) * 2.0  # offset trades off against drift
+        assert al.residual <= 4 * noise
