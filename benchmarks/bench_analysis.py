@@ -23,9 +23,16 @@ Acceptance (wired into CI):
   flaking under shared-machine load);
 * correctness smoke: the path's breakdown sums to the makespan and the
   self-diff reports ~zero error (the cheap ends of the test-suite
-  invariants, asserted here so a broken build cannot post numbers).
+  invariants, asserted here so a broken build cannot post numbers);
+* calibration gate: fitting a perturbed CostModel to a 4-worker capture
+  (:func:`repro.analysis.calibrate.calibrate_scenario`) stays within its
+  simulator-call budget — ``1 + rounds x constants x probes`` — while
+  landing every per-kind WAPE under 5% with a monotone loss history.
+  The loop's cost *is* simulator calls, so the budget is the scaling
+  gate for the calibrate CLI.
 
 CSV: stage,workers,events,seconds,events_per_sec,per_event_vs_small
+(the ``calibrate`` row reports ``sim_calls/budget`` in the last column)
 """
 
 from __future__ import annotations
@@ -35,7 +42,7 @@ import tempfile
 import time
 
 from repro.analysis import cluster_critical_path, diff_cluster
-from repro.core import ClusterGraph, CostModel
+from repro.core import ClusterGraph, CostModel, Scenario
 from repro.traceio import load_trace_dir, write_synthetic_trace_dir
 
 from benchmarks.common import fmt_csv
@@ -94,6 +101,33 @@ def run() -> str:
                 rows.append([stage, WORKERS, events, f"{t:.3f}",
                              f"{events / t:.0f}",
                              f"{per_event[stage][name] / per_event[stage]['small']:.2f}"])
+
+        # ---- calibration convergence-cost gate (ISSUE PR 6) ----
+        cal_dir = os.path.join(tmp, "calibrate")
+        cal_layers = 100
+        write_synthetic_trace_dir(cal_dir, WORKERS, layers=cal_layers,
+                                  cost=CostModel())
+        scn = Scenario(trace_dir=cal_dir,
+                       cost=CostModel(kind_scales={"compute": 1.4},
+                                      ici_factor=0.6))
+        rounds, probes = 6, 6
+        t_cal, (_, rep) = _time_stage(
+            lambda: scn.calibrate(max_rounds=rounds,
+                                  probes_per_constant=probes))
+        budget = 1 + rounds * len(rep.fitted) * probes
+        assert rep.sim_calls <= budget, (
+            f"calibration burned {rep.sim_calls} simulator calls for "
+            f"{len(rep.fitted)} constant(s) (budget: {budget})")
+        assert all(b <= a + 1e-15 for a, b in
+                   zip(rep.loss_history, rep.loss_history[1:])), \
+            "calibration loss history is not monotone"
+        for kind, st in rep.after.per_kind().items():
+            assert st.wape < 0.05, (
+                f"calibrated {kind} WAPE {st.wape:.1%} (acceptance: <5%)")
+        cal_events = _events_total(cal_layers)
+        rows.append(["calibrate", WORKERS, cal_events, f"{t_cal:.3f}",
+                     f"{cal_events / t_cal:.0f}",
+                     f"{rep.sim_calls}/{budget}"])
     for stage, pe in per_event.items():
         ratio = pe["large"] / pe["small"]
         assert ratio <= SCALING_GATE, (

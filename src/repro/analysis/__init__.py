@@ -15,12 +15,18 @@ The simulator (:mod:`repro.core.simulate`), the cluster graphs
 * :mod:`repro.analysis.opportunity` — Amdahl-style speedup upper bounds
   per registered optimization, computed through the real simulator, which
   is the ordering ``hillclimb --search-whatif`` explores.
+* :mod:`repro.analysis.calibrate` — close the fidelity loop: fit CostModel
+  constants (per-kind duration scales, link-bandwidth factors, hop
+  latency) to a captured trace by iterating simulate → diff → refit
+  through the real simulator (dPRO's trace-fitted replayer).
 
-User surfaces: ``python -m repro.launch.diagnose --trace-dir DIR``,
-``perf_report --critical-path``, ``Prediction.critical_path``, and
-``Scenario.diff_against(trace_dir)``.
+User surfaces: ``python -m repro.launch.diagnose --trace-dir DIR
+[--calibrate]``, ``python -m repro.launch.calibrate --trace-dir DIR``,
+``perf_report --critical-path``, ``Prediction.critical_path``,
+``Scenario.diff_against(trace_dir)``, and ``Scenario.calibrate()``.
 """
 
+from .calibrate import CalibrationReport, calibrate_scenario
 from .critical_path import (CATEGORIES, CriticalPath, PathSegment,
                             cluster_critical_path, extract_critical_path)
 from .diff import (KindStats, TaskDiff, TraceDiff, diff_cluster, diff_graph,
@@ -30,6 +36,7 @@ from .opportunity import (NO_HEADROOM, Opportunity, format_opportunity_table,
                           searchable_candidates)
 
 __all__ = [
+    "CalibrationReport", "calibrate_scenario",
     "CATEGORIES", "CriticalPath", "PathSegment",
     "cluster_critical_path", "extract_critical_path",
     "KindStats", "TaskDiff", "TraceDiff",

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.graph import DependencyGraph
@@ -130,8 +131,11 @@ class TraceDiff:
         return dict(out)
 
     def top_mispredicted(self, k: int = 10) -> List[TaskDiff]:
-        """The ``k`` worst-predicted tasks, by :attr:`TaskDiff.abs_error`."""
-        return sorted(self.tasks, key=lambda d: -d.abs_error)[:k]
+        """The ``k`` worst-predicted tasks, by :attr:`TaskDiff.abs_error`
+        (non-finite errors excluded — they rank by :meth:`format`'s n/a
+        rows, not here)."""
+        finite = [d for d in self.tasks if math.isfinite(d.abs_error)]
+        return sorted(finite, key=lambda d: -d.abs_error)[:k]
 
     # ------------------------------------------------------------- report
     def format(self, *, top: int = 10, unit: float = 1e3,
@@ -143,7 +147,7 @@ class TraceDiff:
         lines.append(
             f"makespan: predicted {self.predicted_makespan * unit:.3f} "
             f"{unit_name} vs captured {self.captured_makespan * unit:.3f} "
-            f"{unit_name} ({self.makespan_rel_error * 100:+.2f}%)")
+            f"{unit_name} ({_pct(self.makespan_rel_error, signed=True)})")
         kinds = self.per_kind()
         if kinds:
             lines.append(f"{'kind':12s} {'count':>6s} {'captured':>10s} "
@@ -154,7 +158,7 @@ class TraceDiff:
                     f"{kind:12s} {st.count:6d} "
                     f"{st.captured_s * unit:10.3f} "
                     f"{st.predicted_s * unit:10.3f} "
-                    f"{st.wape * 100:6.2f}% "
+                    f"{_pct(st.wape):>7s} "
                     f"{st.max_abs_err_s * unit:9.4f}")
         worst = [d for d in self.top_mispredicted(top) if d.abs_error > 0]
         if worst:
@@ -167,6 +171,14 @@ class TraceDiff:
                     f"({d.dur_error * unit:+.4f}), start "
                     f"{d.start_error * unit:+.4f}")
         return "\n".join(lines)
+
+
+def _pct(x: float, *, signed: bool = False) -> str:
+    """Render a ratio as a percentage; ``n/a`` for non-finite values
+    (a zero-captured denominator has no meaningful relative error)."""
+    if not math.isfinite(x):
+        return "n/a"
+    return f"{x * 100:+.2f}%" if signed else f"{x * 100:.2f}%"
 
 
 # =============================================================== matching

@@ -602,7 +602,10 @@ class ClusterGraph:
                                                    1e-12)
                     self._prov.append(("coll", nt, i, t.duration))
                 elif t.kind != TaskKind.COMM:
-                    nt.duration = t.duration * spec.compute_scale
+                    # per-kind calibration scale on the duration only: gaps
+                    # are untraced host time, not modeled task cost
+                    nt.duration = t.duration * spec.compute_scale \
+                        * self.cost.kind_scale(t.kind)
                     nt.gap = t.gap * spec.compute_scale
                     self._prov.append(("compute", nt, i, t.duration, t.gap))
                 g.add_task(nt, link_lane=False)
@@ -634,11 +637,8 @@ class ClusterGraph:
     def _link_bandwidth(self, i: int, j: int) -> float:
         """Bandwidth of the ring link worker i -> worker j."""
         wi, wj = self.workers[i], self.workers[j]
-        hw = self.cost.hw
-        if wi.pod != wj.pod:
-            bw = hw.dcn_bandwidth
-        else:
-            bw = hw.ici_bandwidth * hw.ici_links_per_axis
+        bw = self.cost.link_bandwidth(
+            "dcn" if wi.pod != wj.pod else "ici")
         # floor like every other scale use: a 0.0 scale (dead NIC) models as
         # an astronomically slow link rather than a ZeroDivisionError
         return bw * max(min(wi.bandwidth_scale, wj.bandwidth_scale), 1e-12)
@@ -987,7 +987,8 @@ class ClusterGraph:
             kind, t = rec[0], rec[1]
             if kind == "compute":
                 _, _, i, dur, gap = rec
-                t.duration = dur * specs[i].compute_scale
+                t.duration = dur * specs[i].compute_scale \
+                    * self.cost.kind_scale(t.kind)
                 t.gap = gap * specs[i].compute_scale
             elif kind == "coll":
                 _, _, i, dur = rec

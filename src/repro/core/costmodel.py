@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .task import HardwareSpec, TPU_V5E
 
@@ -79,16 +79,21 @@ class CollectiveModel:
 
     def __init__(self, hw: HardwareSpec = TPU_V5E,
                  topo: Optional[MeshTopology] = None,
-                 hop_latency: Optional[float] = None) -> None:
+                 hop_latency: Optional[float] = None,
+                 ici_factor: float = 1.0,
+                 dcn_factor: float = 1.0) -> None:
         self.hw = hw
         self.topo = topo or MeshTopology.single_pod()
         self.hop_latency = (self.HOP_LATENCY if hop_latency is None
                             else hop_latency)
+        self.ici_factor = ici_factor
+        self.dcn_factor = dcn_factor
 
     def _axis_bw(self, kind: str) -> float:
         if kind == "dcn":
-            return self.hw.dcn_bandwidth
-        return self.hw.ici_bandwidth * self.hw.ici_links_per_axis
+            return self.hw.dcn_bandwidth * self.dcn_factor
+        return self.hw.ici_bandwidth * self.hw.ici_links_per_axis \
+            * self.ici_factor
 
     def axis_time(self, op: str, payload_bytes: float, axis_size: int,
                   kind: str = "ici") -> float:
@@ -146,6 +151,33 @@ class CollectiveModel:
         return t
 
 
+@dataclasses.dataclass(frozen=True)
+class FittableConstant:
+    """One CostModel constant the trace-fit loop may adjust.
+
+    ``name`` is the key :meth:`CostModel.with_constants` accepts
+    (``"kind_scale:<task-kind>"``, ``"ici_factor"``, ``"dcn_factor"``,
+    ``"hop_latency"``); ``lo``/``hi`` bound the search, ``log`` says the
+    constant lives on a multiplicative scale (search in log-space), and
+    ``kind`` names the task kind a per-kind scale applies to (None for
+    link-level constants).
+    """
+
+    name: str
+    value: float
+    lo: float
+    hi: float
+    log: bool = True
+    kind: Optional[str] = None
+
+
+# Task kinds whose traced/cloned durations a per-kind scale multiplies
+# (collective/comm durations are bandwidth-derived instead — fit those
+# through ici_factor/dcn_factor/hop_latency).
+SCALED_KINDS: Tuple[str, ...] = ("compute", "memory", "host", "data",
+                                 "offload")
+
+
 @dataclasses.dataclass
 class CostModel:
     """Duration assignment for HLO-derived tasks."""
@@ -160,10 +192,67 @@ class CostModel:
     # Per-ring-step latency override (None = CollectiveModel.HOP_LATENCY);
     # calibrate.py measures it from tiny-payload local collectives.
     hop_latency: Optional[float] = None
+    # Trace-fit constants (repro.analysis.calibrate): per-task-kind duration
+    # multipliers applied to traced/cloned durations on the cluster routes,
+    # and link-bandwidth factors multiplying the ICI / DCN hardware
+    # bandwidths everywhere they are read (ring legs, p2p hops, analytical
+    # collective formulas).  All default to 1.0 == the uncalibrated model.
+    kind_scales: Dict[str, float] = dataclasses.field(default_factory=dict)
+    ici_factor: float = 1.0
+    dcn_factor: float = 1.0
 
     def __post_init__(self) -> None:
         self.collectives = CollectiveModel(self.hw, self.topo,
-                                           hop_latency=self.hop_latency)
+                                           hop_latency=self.hop_latency,
+                                           ici_factor=self.ici_factor,
+                                           dcn_factor=self.dcn_factor)
+
+    # ------------------------------------------------------- trace-fit API
+    def kind_scale(self, kind) -> float:
+        """Duration multiplier for one task kind (TaskKind or value string);
+        1.0 unless calibration set one."""
+        return self.kind_scales.get(getattr(kind, "value", kind), 1.0)
+
+    def link_bandwidth(self, link: str) -> float:
+        """Effective bandwidth of one ``"ici"`` / ``"dcn"`` link, the
+        calibration factors applied — the single source the cluster ring /
+        p2p wiring and the analytical collective formulas share."""
+        return self.collectives._axis_bw(link)
+
+    def fittable_constants(self, kinds: Optional[Sequence[str]] = None
+                           ) -> List[FittableConstant]:
+        """The typed list of constants the trace-fit loop may adjust.
+
+        ``kinds`` restricts the per-kind scales (default:
+        :data:`SCALED_KINDS`).  Bounds are generous-but-physical: duration
+        and bandwidth multipliers within 20x either way, hop latency
+        between 10ns and 1ms.
+        """
+        out = [FittableConstant(f"kind_scale:{k}", self.kind_scale(k),
+                                0.05, 20.0, kind=k)
+               for k in (SCALED_KINDS if kinds is None else kinds)]
+        out.append(FittableConstant("ici_factor", self.ici_factor,
+                                    0.05, 20.0))
+        out.append(FittableConstant("dcn_factor", self.dcn_factor,
+                                    0.05, 20.0))
+        out.append(FittableConstant(
+            "hop_latency",
+            self.collectives.hop_latency, 1e-8, 1e-3))
+        return out
+
+    def with_constants(self, mapping: Dict[str, float]) -> "CostModel":
+        """A copy of this model with fittable constants overridden;
+        ``mapping`` keys are :class:`FittableConstant` names."""
+        ks = dict(self.kind_scales)
+        kwargs: Dict[str, float] = {}
+        for name, val in mapping.items():
+            if name.startswith("kind_scale:"):
+                ks[name.split(":", 1)[1]] = float(val)
+            elif name in ("ici_factor", "dcn_factor", "hop_latency"):
+                kwargs[name] = float(val)
+            else:
+                raise ValueError(f"unknown fittable constant {name!r}")
+        return dataclasses.replace(self, kind_scales=ks, **kwargs)
 
     # ------------------------------------------------------------- durations
     def compute_time(self, flops: float, bytes_accessed: float) -> float:

@@ -298,6 +298,22 @@ class Scenario:
         pred, tf, cg = self.evaluate(opt)
         return diff_prediction(pred, tf, cg, traces)
 
+    def calibrate(self, traces: Any = None, **kwargs):
+        """Fit this scenario's :class:`CostModel` constants against a
+        captured trace set (default: the scenario's own capture) by
+        iterating simulate → :meth:`diff_against` → refit through the real
+        simulator — dPRO's trace-fitted-replayer loop (see
+        :mod:`repro.analysis.calibrate`).
+
+        Returns ``(calibrated_scenario, CalibrationReport)``; this
+        scenario is not mutated, so before/after what-ifs can be compared
+        side by side.  Keyword arguments (``constants``, ``max_rounds``,
+        ``tol``, ``probes_per_constant``) pass through to
+        :func:`repro.analysis.calibrate.calibrate_scenario`.
+        """
+        from repro.analysis.calibrate import calibrate_scenario
+        return calibrate_scenario(self, traces, **kwargs)
+
     def _evaluate(self, opt: "Optimization", *,
                   baseline: Optional[float] = None,
                   point: Optional[Dict[str, Any]] = None,

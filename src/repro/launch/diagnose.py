@@ -12,11 +12,15 @@ JSONL — :mod:`repro.traceio`), then runs the diagnosis subsystem
    the time actually goes;
 3. **opportunity ranking** — Amdahl-style speedup upper bounds for every
    registered optimization, bound vs realized: what is worth trying first;
-4. optionally a concrete ``--what-if`` stack, reported with its own
+4. optionally ``--calibrate``: fit the CostModel constants to the capture
+   (:mod:`repro.analysis.calibrate`) and print the before/after fidelity
+   table — the what-ifs then run on the calibrated model;
+5. optionally a concrete ``--what-if`` stack, reported with its own
    critical path so before/after chains can be compared.
 
     PYTHONPATH=src python -m repro.launch.diagnose --trace-dir traces/ \\
-        [--what-if 'amp,bandwidth:factor=2'] [--top 10] [--no-rank]
+        [--calibrate] [--what-if 'amp,bandwidth:factor=2'] [--top 10] \\
+        [--no-rank]
 """
 
 import argparse
@@ -42,6 +46,11 @@ def main() -> None:
     ap.add_argument("--straggler", default="",
                     help="IDX:SLOWDOWN what-if worker spec layered on top "
                          "of the traced speeds")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit the CostModel to the capture first "
+                         "(repro.analysis.calibrate) and print the "
+                         "before/after fidelity table; the diagnosis "
+                         "below then runs on the calibrated model")
     args = ap.parse_args()
 
     from repro.analysis import (diff_prediction, format_opportunity_table,
@@ -51,6 +60,9 @@ def main() -> None:
 
     imp, scenario = load_trace_scenario(args.trace_dir, args.straggler)
     n = imp.num_workers
+    if args.calibrate:
+        scenario, report = scenario.calibrate()
+        print(report.format())
     pred, tf, cg = scenario.evaluate("noop")
 
     if not args.no_diff:

@@ -27,12 +27,36 @@ Pipeline::
                              re-importable (round-trip invariant)
 
 Format contract: :mod:`repro.traceio.events` (native JSONL) and
-:mod:`repro.traceio.chrome` (Chrome trace-event subset).  Synthetic trace
+:mod:`repro.traceio.chrome` (Chrome trace-event subset).  Real
+``jax.profiler`` / XLA-profiler captures (TensorBoard profile logdirs with
+``plugins/profile/<run>/*.trace.json.gz``) are detected by
+:func:`load_trace_dir` and imported through :mod:`repro.traceio.xla`
+(device/step annotations mapped onto the lane model).  Synthetic trace
 sets for tests/benchmarks: :mod:`repro.traceio.synthetic`.
+
+Gap inference modes (``infer_gaps`` on :func:`load_trace_dir` /
+:func:`graph_from_events`) — Daydream §4.2.1's *gap* is untraced runtime
+between consecutive tasks on one thread:
+
+* ``"host"`` (default): infer missing gaps from inter-event idle time on
+  host threads only.  Device/channel idle is dependency *waiting*, which
+  the graph already expresses; baking it into gaps would pin what-if
+  predictions to the captured timeline.
+* ``"all"``: infer on every thread — use when a capture has no
+  dependency information at all and the timeline should replay as-is.
+* ``"none"``: never infer; only explicitly recorded gaps survive.
+
+Clock alignment guards: degenerate anchor sets fall back to offset-only
+fits (:data:`repro.traceio.align.SCALE_MIN` / ``SCALE_MAX`` bounds on the
+drift term), and multi-worker sets that cannot be anchored at all warn by
+default — pass ``align="strict"`` to :func:`load_trace_dir` to make both
+conditions raise instead.
 
 User surface: ``Scenario(trace_dir=...)`` runs any registered optimization
 stack on imported traces; ``python -m repro.launch.perf_report --trace-dir
-DIR [--what-if STACK] [--export-trace OUT]`` is the CLI form.
+DIR [--what-if STACK] [--export-trace OUT]`` is the CLI form, and
+``python -m repro.launch.calibrate --trace-dir DIR`` fits the CostModel to
+the capture (:mod:`repro.analysis.calibrate`).
 """
 
 from .events import (TraceEvent, TraceImportError, WorkerTrace, classify,
@@ -45,6 +69,7 @@ from .align import (ClockAlignment, align_traces, apply_alignment,
 from .importer import (ImportedCluster, find_worker_files, graph_from_events,
                        load_trace_dir, load_worker_trace)
 from .synthetic import synthetic_cluster_traces, write_synthetic_trace_dir
+from .xla import find_xla_trace_files, load_xla_profile, read_xla_trace
 
 __all__ = [
     "TraceEvent", "TraceImportError", "WorkerTrace",
@@ -56,4 +81,5 @@ __all__ = [
     "ImportedCluster", "find_worker_files", "graph_from_events",
     "load_trace_dir", "load_worker_trace",
     "synthetic_cluster_traces", "write_synthetic_trace_dir",
+    "find_xla_trace_files", "load_xla_profile", "read_xla_trace",
 ]

@@ -20,6 +20,14 @@ reference timeline, and least-squares fits a per-worker affine map
 * no anchors (single worker, or no matched collectives): identity, flagged
   by ``anchors == 0`` so callers can warn.
 
+Real oscillator drift is parts-per-million; a fitted scale far from 1 (or
+non-positive, which would *negate* every duration downstream) can only
+come from a degenerate anchor set — collinear-in-time anchors, mismatched
+collectives, or a noise-dominated fit.  Fits with scale outside
+``[SCALE_MIN, SCALE_MAX]`` therefore fall back to an offset-only map
+(``scale = 1``) with :attr:`ClockAlignment.fallback` set so callers can
+flag the anchors.
+
 :func:`apply_alignment` rescales a trace in place: timestamps map through
 the affine fit; durations and gaps are *intervals*, so they scale by the
 drift term only.
@@ -34,6 +42,12 @@ from typing import Dict, List, Sequence, Tuple
 
 from .events import TraceEvent, WorkerTrace
 
+# Sanity bounds on the fitted drift term.  Physical clock drift is ppm-
+# scale; anything outside a factor of 2 is a degenerate/noise-dominated
+# fit, and a non-positive scale would negate durations and gaps outright.
+SCALE_MIN = 0.5
+SCALE_MAX = 2.0
+
 
 @dataclasses.dataclass(frozen=True)
 class ClockAlignment:
@@ -43,6 +57,7 @@ class ClockAlignment:
     offset: float = 0.0      # seconds
     anchors: int = 0         # matched collective ends the fit used
     residual: float = 0.0    # RMS fit residual, seconds
+    fallback: bool = False   # drift fit rejected -> offset-only map
 
     def apply_time(self, ts: float) -> float:
         return self.scale * ts + self.offset
@@ -110,13 +125,22 @@ def align_traces(traces: Sequence[WorkerTrace],
         if not xs:
             out.append(ClockAlignment(anchors=0))
             continue
+        fallback = False
         if len(xs) == 1:
             a, b = 1.0, ys[0] - xs[0]
         else:
             a, b = _fit(xs, ys)
+            if not (math.isfinite(a) and SCALE_MIN <= a <= SCALE_MAX):
+                # degenerate anchors (noise/mismatch): a wildly-off or
+                # non-positive drift would corrupt every duration, so keep
+                # the clock rate and fit the offset alone
+                a = 1.0
+                b = sum(y - x for x, y in zip(xs, ys)) / len(xs)
+                fallback = True
         rss = sum((a * x + b - y) ** 2 for x, y in zip(xs, ys))
         out.append(ClockAlignment(scale=a, offset=b, anchors=len(xs),
-                                  residual=math.sqrt(rss / len(xs))))
+                                  residual=math.sqrt(rss / len(xs)),
+                                  fallback=fallback))
     return out
 
 

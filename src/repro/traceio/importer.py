@@ -28,7 +28,8 @@ import dataclasses
 import glob
 import os
 import re
-from typing import Dict, List, Optional, Sequence
+import warnings
+from typing import Dict, List, Optional, Sequence, Union
 
 from repro.core.graph import DependencyGraph, GraphError
 from repro.core.task import HOST_THREAD
@@ -148,7 +149,36 @@ def load_worker_trace(path: str, worker: int = 0) -> WorkerTrace:
         f"{path}: unknown trace format (expected .jsonl or .json)")
 
 
-def load_trace_dir(trace_dir: str, *, align: bool = True,
+def _check_alignment_quality(alignments: Sequence[ClockAlignment],
+                             strict: bool, source: str) -> None:
+    """Flag multi-worker alignments that could not actually align.
+
+    ``anchors == 0`` means a worker shares no matched collective with the
+    set and kept its own clock verbatim (identity map); ``fallback`` means
+    the drift fit was degenerate and only the offset was corrected.  Either
+    way the diff/calibration downstream compares against possibly-skewed
+    clocks, so warn by default and raise under ``align="strict"``.
+    """
+    unanchored = [i for i, al in enumerate(alignments) if al.anchors == 0]
+    fallbacks = [i for i, al in enumerate(alignments) if al.fallback]
+    if not unanchored and not fallbacks:
+        return
+    parts = []
+    if unanchored:
+        parts.append(f"worker(s) {unanchored} share no matched collectives "
+                     f"with the set (identity clock map)")
+    if fallbacks:
+        parts.append(f"worker(s) {fallbacks} had a degenerate drift fit "
+                     f"(offset-only fallback)")
+    msg = (f"{source}: clock alignment is unreliable — " + "; ".join(parts)
+           + "; timestamps may be cross-worker skewed")
+    if strict:
+        raise TraceImportError(msg)
+    warnings.warn(msg, stacklevel=3)
+
+
+def load_trace_dir(trace_dir: str, *,
+                   align: Union[bool, str] = True,
                    infer_gaps: str = "host") -> ImportedCluster:
     """Load a per-worker trace directory into an :class:`ImportedCluster`.
 
@@ -159,9 +189,24 @@ def load_trace_dir(trace_dir: str, *, align: bool = True,
     zero-duration gate tasks in
     :meth:`~repro.core.cluster.ClusterGraph.from_worker_graphs`, so a
     worker that genuinely started late stays late in the simulation.
+
+    ``align`` is ``True`` (align, warn when a multi-worker set cannot be
+    anchored), ``False`` (keep local clocks), or ``"strict"`` (align, raise
+    :class:`TraceImportError` when any worker has no anchors or needed the
+    offset-only fallback).
+
+    XLA profiler captures (``jax.profiler`` log directories holding
+    ``plugins/profile/<run>/*.trace.json.gz``) are detected and routed
+    through :func:`repro.traceio.xla.load_xla_profile`.
     """
+    if align not in (True, False, "strict"):
+        raise ValueError(f"align must be True, False or 'strict', "
+                         f"got {align!r}")
     if not os.path.isdir(trace_dir):
         raise TraceImportError(f"trace dir {trace_dir!r} does not exist")
+    from .xla import find_xla_trace_files, load_xla_profile
+    if find_xla_trace_files(trace_dir):
+        return load_xla_profile(trace_dir, infer_gaps=infer_gaps)
     files = find_worker_files(trace_dir)
     if not files:
         raise TraceImportError(
@@ -169,6 +214,7 @@ def load_trace_dir(trace_dir: str, *, align: bool = True,
     traces = [load_worker_trace(f, i) for i, f in enumerate(files)]
     if align and len(traces) > 1:
         alignments = align_traces(traces)
+        _check_alignment_quality(alignments, align == "strict", trace_dir)
         for tr, al in zip(traces, alignments):
             apply_alignment(tr, al)
     else:

@@ -30,10 +30,10 @@ from repro.core import (ClusterGraph, CostModel, Scenario, Task, TaskKind,
                         DEVICE_STREAM)
 from repro.core.optimize import default_candidates
 from repro import traceio
-from repro.analysis import (cluster_critical_path, diff_cluster, diff_graph,
-                            extract_critical_path, format_opportunity_table,
-                            opportunity_bound, rank_opportunities,
-                            searchable_candidates)
+from repro.analysis import (TaskDiff, TraceDiff, cluster_critical_path,
+                            diff_cluster, diff_graph, extract_critical_path,
+                            format_opportunity_table, opportunity_bound,
+                            rank_opportunities, searchable_candidates)
 from synthgraphs import random_dag, training_step_graph
 
 LAYERS = 6
@@ -257,6 +257,45 @@ class TestTraceDiff:
         assert diff.makespan_rel_error == pytest.approx(0.0, abs=1e-6)
         assert diff.max_abs_error() <= 1e-6
         assert "predicted vs captured" in diff.format()
+
+    def test_zero_duration_kind_renders_na(self):
+        """Satellite bugfix: a kind whose captured durations are all zero
+        makes WAPE (and a zero captured makespan makes the relative
+        makespan error) ``inf`` — the report must render ``n/a``, not a
+        garbled ``inf%``, and the top-K ranking must stay finite."""
+        def td(name, kind, pred_dur, cap_dur):
+            return TaskDiff(worker=0, thread="device", name=name,
+                            occurrence=0, kind=kind,
+                            predicted_start=0.0, predicted_dur=pred_dur,
+                            captured_start=0.0, captured_dur=cap_dur)
+        diff = TraceDiff(
+            tasks=[td("marker", "host", 1e-3, 0.0),       # wape -> inf
+                   td("mm", "compute", 2e-3, 1e-3)],
+            unmatched_predicted=[], unmatched_captured=[],
+            predicted_makespan=3e-3, captured_makespan=0.0)
+        assert math.isinf(diff.per_kind()["host"].wape)
+        assert math.isinf(diff.makespan_rel_error)
+        out = diff.format()
+        assert "n/a" in out
+        assert "inf" not in out and "nan" not in out
+        # finite rows still render as percentages
+        assert "100.00%" in out
+        # the ranking is by finite |error| only
+        assert all(math.isfinite(d.abs_error)
+                   for d in diff.top_mispredicted(10))
+
+    def test_all_zero_capture_stays_renderable(self):
+        """Degenerate but reachable: every captured duration zero."""
+        diff = TraceDiff(
+            tasks=[TaskDiff(worker=0, thread="device", name="x",
+                            occurrence=0, kind="compute",
+                            predicted_start=0.0, predicted_dur=1e-3,
+                            captured_start=0.0, captured_dur=0.0)],
+            unmatched_predicted=[], unmatched_captured=[],
+            predicted_makespan=1e-3, captured_makespan=0.0)
+        out = diff.format()
+        assert "inf" not in out
+        assert out.count("n/a") >= 2          # makespan line + kind row
 
 
 # ======================================================= p2p hop round trip

@@ -1,0 +1,238 @@
+"""Auto-calibration subsystem (repro.analysis.calibrate) acceptance tests.
+
+The ISSUE's golden criterion lives here: perturb a CostModel, synthesize a
+capture from the *unperturbed* one, and assert the simulate → diff → refit
+loop recovers the constants, drives per-kind WAPE under 5% (dPRO's
+headline bound), and keeps the loss history monotonically non-increasing —
+plus the real ``jax.profiler`` capture fixture the calibrate CLI must
+digest.
+"""
+
+import dataclasses
+import io
+import math
+import os
+import sys
+
+import pytest
+
+from repro.core.costmodel import CollectiveModel, CostModel, FittableConstant
+from repro.core.optimize import Scenario
+from repro.traceio import load_trace_dir, write_synthetic_trace_dir
+
+LAYERS = 4
+N_WORKERS = 4
+
+
+@pytest.fixture(scope="module")
+def capture_dir(tmp_path_factory):
+    """A synthetic 4-worker capture generated from the TRUE (default)
+    CostModel — the ground truth calibration must recover."""
+    d = tmp_path_factory.mktemp("capture")
+    write_synthetic_trace_dir(str(d), N_WORKERS, layers=LAYERS,
+                              cost=CostModel())
+    return str(d)
+
+
+def perturbed_cost() -> CostModel:
+    """Compute durations 30% hot, ICI bandwidth modeled at half speed."""
+    return CostModel(kind_scales={"compute": 1.3}, ici_factor=0.5)
+
+
+# ====================================================== parameter introspection
+class TestFittableConstants:
+    def test_typed_list_with_bounds(self):
+        consts = CostModel().fittable_constants()
+        by_name = {c.name: c for c in consts}
+        assert "kind_scale:compute" in by_name
+        assert "ici_factor" in by_name and "dcn_factor" in by_name
+        assert "hop_latency" in by_name
+        for c in consts:
+            assert isinstance(c, FittableConstant)
+            assert c.lo < c.hi
+            assert c.lo <= c.value <= c.hi
+        assert by_name["kind_scale:compute"].kind == "compute"
+        assert by_name["hop_latency"].value == CollectiveModel.HOP_LATENCY
+
+    def test_with_constants_round_trips(self):
+        cost = CostModel().with_constants(
+            {"kind_scale:compute": 1.5, "ici_factor": 0.5,
+             "hop_latency": 5e-6})
+        assert cost.kind_scale("compute") == 1.5
+        assert cost.kind_scale("host") == 1.0        # untouched default
+        assert cost.ici_factor == 0.5
+        assert cost.collectives.hop_latency == 5e-6
+        with pytest.raises(ValueError, match="unknown fittable"):
+            CostModel().with_constants({"warp_factor": 9.0})
+
+    def test_factors_thread_into_link_bandwidth(self):
+        base = CostModel()
+        half = CostModel(ici_factor=0.5, dcn_factor=2.0)
+        assert half.link_bandwidth("ici") == \
+            pytest.approx(0.5 * base.link_bandwidth("ici"))
+        assert half.link_bandwidth("dcn") == \
+            pytest.approx(2.0 * base.link_bandwidth("dcn"))
+        # analytical collective formulas read the same factored bandwidth
+        t_base = base.collectives.axis_time("all-reduce", 1e8, 8)
+        t_half = half.collectives.axis_time("all-reduce", 1e8, 8)
+        assert t_half > t_base
+
+    def test_defaults_change_nothing(self):
+        """kind_scales/factors default to the identity: a default-cost
+        trace scenario predicts exactly what it did before this PR."""
+        base = CostModel()
+        assert base.kind_scale("compute") == 1.0
+        assert base.link_bandwidth("ici") == \
+            base.hw.ici_bandwidth * base.hw.ici_links_per_axis
+        assert base.link_bandwidth("dcn") == base.hw.dcn_bandwidth
+
+    def test_kind_scales_reach_trace_route_durations(self, capture_dir):
+        plain = Scenario(trace_dir=capture_dir)
+        hot = Scenario(trace_dir=capture_dir,
+                       cost=CostModel(kind_scales={"compute": 2.0}))
+        d_plain = plain.diff_against(plain.traces)
+        d_hot = hot.diff_against(hot.traces)
+        assert d_plain.per_kind()["compute"].wape == pytest.approx(0.0)
+        assert d_hot.per_kind()["compute"].wape == pytest.approx(1.0)
+
+
+# ================================================================ golden loop
+class TestGoldenCalibration:
+    def test_recovers_constants_and_fidelity(self, capture_dir):
+        scn = Scenario(trace_dir=capture_dir, cost=perturbed_cost())
+        calibrated, rep = scn.calibrate()
+
+        # loss must be monotonically non-increasing and actually improve
+        assert all(b <= a + 1e-15 for a, b in
+                   zip(rep.loss_history, rep.loss_history[1:]))
+        assert rep.loss_after < rep.loss_before
+        assert rep.loss_before > 0.2          # the perturbation was real
+
+        # the perturbed compute scale is recovered exactly (closed-form
+        # weighted-median update against the same capture)
+        init, fitted = rep.fitted["kind_scale:compute"]
+        assert init == 1.3
+        assert fitted == pytest.approx(1.0, rel=1e-6)
+
+        # per-kind WAPE under dPRO's 5% bound, all kinds
+        for kind, st in rep.after.per_kind().items():
+            assert st.wape < 0.05, (kind, st.wape)
+        assert abs(rep.after.makespan_rel_error) < 0.05
+
+        # the calibrated scenario reproduces the fit stand-alone
+        d = calibrated.diff_against(calibrated.traces)
+        for kind, st in d.per_kind().items():
+            assert st.wape < 0.05, (kind, st.wape)
+        # and the input scenario was not mutated
+        assert scn.cost.kind_scale("compute") == 1.3
+
+    def test_bounded_simulator_calls(self, capture_dir):
+        scn = Scenario(trace_dir=capture_dir, cost=perturbed_cost())
+        probes = 6
+        _, rep = scn.calibrate(probes_per_constant=probes)
+        budget = 1 + rep.rounds * len(rep.fitted) * probes
+        assert rep.sim_calls <= budget
+
+    def test_constant_subset_and_unknown_names(self, capture_dir):
+        scn = Scenario(trace_dir=capture_dir, cost=perturbed_cost())
+        _, rep = scn.calibrate(constants=["kind_scale:compute"])
+        assert set(rep.fitted) == {"kind_scale:compute"}
+        assert rep.fitted["kind_scale:compute"][1] == \
+            pytest.approx(1.0, rel=1e-6)
+        # ici stays perturbed -> collective error remains
+        assert rep.after.per_kind()["collective"].wape > 0.05
+        with pytest.raises(ValueError, match="unknown/unfittable"):
+            scn.calibrate(constants=["kind_scale:bogus"])
+
+    def test_faithful_model_converges_immediately(self, capture_dir):
+        scn = Scenario(trace_dir=capture_dir)      # true constants already
+        _, rep = scn.calibrate()
+        assert rep.converged
+        assert rep.sim_calls == 1                  # no probing a 0 loss
+        assert rep.loss_before == pytest.approx(0.0, abs=1e-9)
+
+    def test_report_format_renders_table(self, capture_dir):
+        scn = Scenario(trace_dir=capture_dir, cost=perturbed_cost())
+        _, rep = scn.calibrate()
+        out = rep.format()
+        assert "wape before" in out and "wape after" in out
+        assert "kind_scale:compute" in out
+        assert "makespan rel err" in out
+        assert "inf" not in out
+
+    def test_calibrate_needs_a_capture(self):
+        from synthgraphs import training_step_graph
+        scn = Scenario(training_step_graph(layers=2))
+        with pytest.raises(ValueError, match="captured trace set"):
+            scn.calibrate()
+
+    def test_explicit_trace_dir_argument(self, capture_dir):
+        """Calibrating an analytic scenario against an external capture
+        takes the trace route internally and returns a calibrated copy."""
+        scn = Scenario(trace_dir=capture_dir, cost=perturbed_cost())
+        calibrated, rep = scn.calibrate(capture_dir)
+        assert rep.loss_after < rep.loss_before
+        assert calibrated.cost.kind_scale("compute") == \
+            pytest.approx(1.0, rel=1e-6)
+
+
+# ===================================================== real jax.profiler fixture
+@pytest.fixture(scope="module")
+def jax_profile_dir(tmp_path_factory):
+    """A real ``jax.profiler`` capture of a few annotated steps of a jitted
+    matmul — the CPU-backed XLA profile the calibrate CLI must digest."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    logdir = str(tmp_path_factory.mktemp("jaxprof"))
+    f = jax.jit(lambda x: (x @ x).sum())
+    x = jnp.ones((256, 256))
+    f(x).block_until_ready()                      # compile outside the trace
+    jax.profiler.start_trace(logdir)
+    for step in range(3):
+        with jax.profiler.StepTraceAnnotation("train", step_num=step):
+            f(x).block_until_ready()
+    jax.profiler.stop_trace()
+    from repro.traceio import find_xla_trace_files
+    if not find_xla_trace_files(logdir):
+        pytest.skip("jax.profiler produced no .trace.json.gz on this host")
+    return logdir
+
+
+class TestRealJaxCapture:
+    def test_import_maps_onto_lane_model(self, jax_profile_dir):
+        imp = load_trace_dir(jax_profile_dir)     # format auto-detected
+        assert imp.num_workers >= 1
+        events = imp.traces[0].events
+        lanes = {e.thread for e in events}
+        assert "device" in lanes                  # XLA runtime thread
+        # step slicing kept one step: every HLO op of the jitted program
+        # appears a bounded number of times, and lanes never overlap
+        by_lane = {}
+        for e in events:
+            by_lane.setdefault(e.thread, []).append(e)
+        for evs in by_lane.values():
+            evs.sort(key=lambda e: e.ts)
+            for a, b in zip(evs, evs[1:]):
+                assert b.ts >= a.end - 1e-12
+        assert all(e.dur >= 0 for e in events)
+
+    def test_calibrate_cli_prints_fidelity_table(self, jax_profile_dir,
+                                                 capsys, monkeypatch):
+        from repro.launch.calibrate import main
+        monkeypatch.setattr(sys, "argv",
+                            ["calibrate", "--trace-dir", jax_profile_dir])
+        main()
+        out = capsys.readouterr().out
+        assert "wape before" in out and "wape after" in out
+        assert "makespan rel err" in out
+
+    def test_scenario_calibrates_real_capture(self, jax_profile_dir):
+        imp = load_trace_dir(jax_profile_dir)
+        scn = Scenario(traces=imp,
+                       cost=CostModel(kind_scales={"compute": 1.5}))
+        calibrated, rep = scn.calibrate()
+        # trace durations are ground truth here, so the injected 1.5x
+        # compute perturbation must fit back out
+        assert rep.fitted["kind_scale:compute"][1] == \
+            pytest.approx(1.0, rel=1e-6)
+        assert rep.after.per_kind()["compute"].wape < 0.05

@@ -467,3 +467,255 @@ def test_hop_latency_calibration_plumbing():
     expected = (2e6 / 4) / (hw.ici_bandwidth * hw.ici_links_per_axis) + hop
     assert min(t.duration for t in legs) == pytest.approx(expected,
                                                           rel=1e-12)
+
+
+# ===================================================== degenerate clock fits
+class TestAlignmentGuards:
+    """Satellite: _fit on noisy/degenerate anchors can produce a
+    non-positive or wildly-off scale; apply_alignment would then negate
+    every duration.  The fit must fall back to offset-only instead."""
+
+    @staticmethod
+    def _trace(worker, ends):
+        evs = [TraceEvent(name, "ici:grad", ts=end - 1e-3, dur=1e-3,
+                          eid=i, collective="all-reduce")
+               for i, (name, end) in enumerate(ends)]
+        return WorkerTrace(worker, evs)
+
+    def test_negative_slope_anchors_fall_back_to_offset(self):
+        # anchor pairs with anti-correlated times: least squares gives a
+        # negative scale, which must be rejected
+        t0 = self._trace(0, [("allreduce:a", 0.2), ("allreduce:b", 0.1)])
+        t1 = self._trace(1, [("allreduce:a", 0.1), ("allreduce:b", 0.2)])
+        aligns = align_traces([t0, t1])
+        al = aligns[1]
+        assert al.fallback
+        assert al.scale == 1.0
+        assert al.anchors == 2
+        apply_alignment(t1, al)
+        assert all(ev.dur > 0 for ev in t1.events)
+
+    def test_wildly_off_scale_falls_back(self):
+        # nearly-coincident local anchors against well-spread reference
+        # ones: the regression slope explodes past any physical drift
+        t0 = self._trace(0, [("allreduce:a", 0.1), ("allreduce:b", 0.9)])
+        t1 = self._trace(1, [("allreduce:a", 0.5), ("allreduce:b", 0.502)])
+        aligns = align_traces([t0, t1])
+        assert aligns[1].fallback
+        assert aligns[1].scale == 1.0
+        # offset-only map still centers the anchors
+        assert aligns[1].offset == pytest.approx(0.5 - 0.501, abs=1e-9)
+
+    def test_physical_drift_is_not_rejected(self):
+        traces = synthetic_cluster_traces(
+            2, clock_offsets=[0.0, 0.1], clock_drifts=[1.0, 1.0005])
+        aligns = align_traces(traces)
+        assert not aligns[1].fallback
+        assert aligns[1].scale == pytest.approx(1.0 / 1.0005, rel=1e-9)
+
+    def test_degenerate_durations_never_go_negative(self, tmp_path):
+        """End to end: an adversarial capture imports with positive
+        durations everywhere (the graph would reject negatives)."""
+        t0 = self._trace(0, [("allreduce:a", 0.2), ("allreduce:b", 0.1)])
+        t1 = self._trace(1, [("allreduce:a", 0.1), ("allreduce:b", 0.2)])
+        d = write_traces(tmp_path, [t0, t1])
+        imp = load_trace_dir(d)
+        for tr in imp.traces:
+            assert all(ev.dur > 0 for ev in tr.events)
+
+
+# ==================================================== unanchored multi-worker
+class TestAlignmentQualityChecks:
+    """Satellite: multi-worker captures whose traces share zero matched
+    collectives must not silently proceed with identity alignment."""
+
+    @staticmethod
+    def _disjoint_dir(tmp_path):
+        # two workers with no common collective names -> zero anchors
+        t0 = WorkerTrace(0, [
+            TraceEvent("allreduce:x", "ici:grad", ts=0.0, dur=1e-3, eid=0,
+                       collective="all-reduce"),
+            TraceEvent("k", "device", ts=0.0, dur=1e-3, eid=1)])
+        t1 = WorkerTrace(1, [
+            TraceEvent("allreduce:y", "ici:grad", ts=0.0, dur=1e-3, eid=0,
+                       collective="all-reduce"),
+            TraceEvent("k", "device", ts=0.0, dur=1e-3, eid=1)])
+        return write_traces(tmp_path, [t0, t1])
+
+    def test_zero_anchor_import_warns_by_default(self, tmp_path):
+        d = self._disjoint_dir(tmp_path)
+        with pytest.warns(UserWarning,
+                          match="share no matched collectives"):
+            imp = load_trace_dir(d)
+        assert imp.num_workers == 2            # still usable, just flagged
+
+    def test_strict_alignment_raises(self, tmp_path):
+        d = self._disjoint_dir(tmp_path)
+        with pytest.raises(TraceImportError, match="unreliable"):
+            load_trace_dir(d, align="strict")
+
+    def test_strict_rejects_fallback_fits(self, tmp_path):
+        t0 = TestAlignmentGuards._trace(
+            0, [("allreduce:a", 0.2), ("allreduce:b", 0.1)])
+        t1 = TestAlignmentGuards._trace(
+            1, [("allreduce:a", 0.1), ("allreduce:b", 0.2)])
+        d = write_traces(tmp_path, [t0, t1])
+        with pytest.raises(TraceImportError, match="degenerate drift"):
+            load_trace_dir(d, align="strict")
+
+    def test_align_false_stays_silent(self, tmp_path, recwarn):
+        d = self._disjoint_dir(tmp_path)
+        load_trace_dir(d, align=False)
+        assert not [w for w in recwarn
+                    if "collectives" in str(w.message)]
+
+    def test_anchored_import_does_not_warn(self, tmp_path, recwarn):
+        d = write_traces(tmp_path, synthetic_cluster_traces(2))
+        load_trace_dir(d, align="strict")      # anchors exist: no raise
+        assert not [w for w in recwarn
+                    if "collectives" in str(w.message)]
+
+    def test_bad_align_value_rejected(self, tmp_path):
+        d = write_traces(tmp_path, synthetic_cluster_traces(2))
+        with pytest.raises(ValueError, match="align must be"):
+            load_trace_dir(d, align="loose")
+
+
+# ============================================================ XLA profiler
+class TestXlaImport:
+    """jax.profiler / XLA capture reader (repro.traceio.xla) on
+    handcrafted captures — the real-capture fixture lives in
+    test_calibrate.py."""
+
+    @staticmethod
+    def _write_capture(path, events, gz=True):
+        import gzip as _gzip
+        doc = {"displayTimeUnit": "ns", "metadata": {},
+               "traceEvents": events}
+        if gz:
+            with _gzip.open(path, "wt") as f:
+                json.dump(doc, f)
+        else:
+            with open(path, "w") as f:
+                json.dump(doc, f)
+
+    @classmethod
+    def _profile_dir(cls, tmp_path, events):
+        run = tmp_path / "plugins" / "profile" / "2026_01_01_00_00_00"
+        os.makedirs(str(run))
+        cls._write_capture(str(run / "host.trace.json.gz"), events)
+        return str(tmp_path)
+
+    @staticmethod
+    def _meta(pid, tid, pname, tname):
+        return [{"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+                 "args": {"name": pname}},
+                {"ph": "M", "name": "thread_name", "pid": pid, "tid": tid,
+                 "args": {"name": tname}}]
+
+    def _step_capture(self):
+        evs = self._meta(7, 1, "/host:CPU", "tf_XLATfrtCpuClient/1")
+        evs += self._meta(7, 2, "/host:CPU", "python")[1:]
+        for step, base in ((0, 1000.0), (1, 2000.0)):
+            evs.append({"ph": "X", "name": "train", "pid": 7, "tid": 2,
+                        "ts": base, "dur": 500.0,
+                        "args": {"step_num": str(step)}})
+            # nested python flame: outer frame contains two leaves
+            evs.append({"ph": "X", "name": "$m outer", "pid": 7, "tid": 2,
+                        "ts": base + 10, "dur": 100.0, "args": {}})
+            evs.append({"ph": "X", "name": "$m leaf1", "pid": 7, "tid": 2,
+                        "ts": base + 20, "dur": 30.0, "args": {}})
+            evs.append({"ph": "X", "name": "$m leaf2", "pid": 7, "tid": 2,
+                        "ts": base + 60, "dur": 40.0, "args": {}})
+            evs.append({"ph": "X", "name": "dot.1", "pid": 7, "tid": 1,
+                        "ts": base + 120, "dur": 200.0,
+                        "args": {"hlo_op": "dot.1",
+                                 "hlo_module": "jit_f"}})
+            evs.append({"ph": "X", "name": "all-reduce.2", "pid": 7,
+                        "tid": 1, "ts": base + 330, "dur": 50.0,
+                        "args": {"hlo_op": "all-reduce.2",
+                                 "hlo_module": "jit_f"}})
+        return evs
+
+    def test_step_slicing_keeps_last_step_only(self, tmp_path):
+        d = self._profile_dir(tmp_path, self._step_capture())
+        imp = traceio.load_xla_profile(d)          # step="last"
+        names = [e.name for e in imp.traces[0].events]
+        assert "dot.1" in names and "all-reduce.2" in names
+        assert names.count("dot.1") == 1           # one step, not two
+        assert "train" not in names                # marker itself excluded
+        # leaf extraction: the container frame is gone, leaves survive
+        assert "$m outer" not in names
+        assert "$m leaf1" in names and "$m leaf2" in names
+
+    def test_explicit_and_all_step_selection(self, tmp_path):
+        d = self._profile_dir(tmp_path, self._step_capture())
+        imp0 = traceio.load_xla_profile(d, step=0)
+        assert [e.name for e in imp0.traces[0].events].count("dot.1") == 1
+        imp_all = traceio.load_xla_profile(d, step=None)
+        assert [e.name
+                for e in imp_all.traces[0].events].count("dot.1") == 2
+        with pytest.raises(TraceImportError, match="not in capture"):
+            traceio.load_xla_profile(d, step=9)
+
+    def test_lanes_kinds_and_units(self, tmp_path):
+        d = self._profile_dir(tmp_path, self._step_capture())
+        imp = traceio.load_xla_profile(d)
+        by_name = {}
+        for ev in imp.traces[0].events:
+            by_name[ev.name] = ev
+        assert by_name["dot.1"].thread == "device"
+        assert by_name["$m leaf1"].thread == "host"
+        assert by_name["dot.1"].dur == pytest.approx(200e-6)  # us -> s
+        g = imp.graphs[0]
+        kinds = {t.name: t.kind for t in g.tasks()}
+        assert kinds["dot.1"] == TaskKind.COMPUTE
+        assert kinds["all-reduce.2"] == TaskKind.COLLECTIVE
+        assert kinds["$m leaf1"] == TaskKind.HOST
+
+    def test_load_trace_dir_detects_xla_profiles(self, tmp_path):
+        d = self._profile_dir(tmp_path, self._step_capture())
+        imp = load_trace_dir(d)                    # auto-detected
+        assert imp.num_workers == 1
+        assert any(e.thread == "device" for e in imp.traces[0].events)
+
+    def test_latest_run_wins_and_file_paths_accepted(self, tmp_path):
+        d = self._profile_dir(tmp_path, self._step_capture())
+        older = tmp_path / "plugins" / "profile" / "2020_01_01_00_00_00"
+        os.makedirs(str(older))
+        self._write_capture(str(older / "host.trace.json.gz"),
+                            self._meta(1, 1, "/host:CPU", "python"))
+        files = traceio.find_xla_trace_files(str(tmp_path))
+        assert len(files) == 1 and "2026_01_01" in files[0]
+        # a single trace file is also a valid entry point
+        assert traceio.find_xla_trace_files(files[0]) == [files[0]]
+
+    def test_native_chrome_exports_are_not_claimed(self, tmp_path):
+        """Regression: a directory of native ``worker<N>.trace.json``
+        exports must NOT be detected as an XLA capture — that would
+        bypass the provenance-aware importer."""
+        g = whatif.what_if_distributed(
+            training_step_graph(layers=2),
+            {f"l{i}": 1e6 for i in range(2)}, num_workers=2).graph
+        cg = ClusterGraph.build(g, 2, cost=CostModel())
+        res = cg.simulate()
+        traceio.export_cluster_traces(cg, res, str(tmp_path))
+        assert traceio.find_xla_trace_files(str(tmp_path)) == []
+        imp = load_trace_dir(str(tmp_path))
+        assert imp.num_workers == 2
+
+    def test_capture_without_steps_keeps_everything(self, tmp_path):
+        evs = self._meta(7, 1, "/host:CPU", "tf_XLATfrtCpuClient/1")
+        evs.append({"ph": "X", "name": "dot.9", "pid": 7, "tid": 1,
+                    "ts": 100.0, "dur": 10.0, "args": {"hlo_op": "dot.9"}})
+        d = self._profile_dir(tmp_path, evs)
+        imp = traceio.load_xla_profile(d)
+        assert [e.name for e in imp.traces[0].events] == ["dot.9"]
+
+    def test_empty_or_malformed_captures_raise(self, tmp_path):
+        d = self._profile_dir(tmp_path, self._meta(1, 1, "/host:CPU",
+                                                   "python"))
+        with pytest.raises(TraceImportError, match="no complete"):
+            traceio.load_xla_profile(d)
+        with pytest.raises(TraceImportError, match="no XLA profile"):
+            traceio.load_xla_profile(str(tmp_path / "nope"))

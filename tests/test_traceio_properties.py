@@ -27,10 +27,11 @@ hypothesis = pytest.importorskip("hypothesis")
 st = pytest.importorskip("hypothesis.strategies")
 from hypothesis import given, settings
 
-from repro.core import ClusterGraph, CostModel, whatif, simulate
-from repro.traceio import (align_traces, events_from_graph,
+from repro.core import ClusterGraph, CostModel, Scenario, whatif, simulate
+from repro.traceio import (align_traces, apply_alignment, events_from_graph,
                            graph_from_events, read_jsonl,
-                           synthetic_cluster_traces, write_jsonl)
+                           synthetic_cluster_traces, write_jsonl,
+                           write_synthetic_trace_dir)
 from repro.traceio.events import WorkerTrace
 from synthgraphs import training_step_graph
 
@@ -137,3 +138,56 @@ def test_alignment_recovers_skew_under_anchor_noise(n, layers, offsets,
         assert abs(recovered_offset_at_t0) <= 8 * noise / d + \
             abs(al.scale - 1.0 / d) * 2.0  # offset trades off against drift
         assert al.residual <= 4 * noise
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 4), layers=st.integers(2, 6),
+       offsets=st.lists(st.floats(-1000.0, 1000.0), min_size=3, max_size=3),
+       drifts=st.lists(st.floats(1.05, 1.9), min_size=3, max_size=3))
+def test_alignment_round_trips_negative_drift_and_large_offsets(
+        n, layers, offsets, drifts):
+    """Satellite property: aligning traces skewed by drift > 1 (recovered
+    scale < 1) and offsets up to ±1000 s reproduces the clean reference
+    timeline — and such physical skews must never trip the degenerate-fit
+    fallback guard."""
+    off = [0.0] + offsets[:n - 1]
+    dr = [1.0] + drifts[:n - 1]
+    clean = synthetic_cluster_traces(n, layers=layers)
+    skewed = synthetic_cluster_traces(
+        n, layers=layers, clock_offsets=off, clock_drifts=dr)
+    aligns = align_traces(skewed)
+    for w, al in enumerate(aligns):
+        assert not al.fallback
+        if w > 0:
+            assert al.scale == pytest.approx(1.0 / dr[w], rel=1e-9)
+            assert al.scale < 1.0          # drift > 1 compresses the map
+        apply_alignment(skewed[w], al)
+        for ev_clean, ev in zip(clean[w].events, skewed[w].events):
+            assert ev.ts == pytest.approx(ev_clean.ts, abs=1e-6)
+            assert ev.dur == pytest.approx(ev_clean.dur, abs=1e-6)
+            assert ev.dur > 0
+
+
+@pytest.fixture(scope="module")
+def true_capture(tmp_path_factory):
+    """A small 2-worker capture from the TRUE (default) CostModel, shared
+    across calibration-recovery examples."""
+    d = tmp_path_factory.mktemp("prop_capture")
+    write_synthetic_trace_dir(str(d), 2, layers=3, cost=CostModel())
+    return str(d)
+
+
+@settings(max_examples=8, deadline=None)
+@given(scale=st.one_of(st.floats(0.3, 0.8), st.floats(1.25, 3.0)))
+def test_calibration_recovers_perturbed_compute_scale(true_capture, scale):
+    """Satellite property: for any real compute-duration perturbation the
+    simulate → diff → refit loop fits the scale back out — recovered
+    kind_scale ≈ 1.0 against the true capture, loss non-increasing."""
+    scn = Scenario(trace_dir=true_capture,
+                   cost=CostModel(kind_scales={"compute": scale}))
+    calibrated, rep = scn.calibrate(constants=["kind_scale:compute"])
+    assert rep.fitted["kind_scale:compute"][1] == \
+        pytest.approx(1.0, rel=1e-6)
+    assert all(b <= a + 1e-15 for a, b in
+               zip(rep.loss_history, rep.loss_history[1:]))
+    assert rep.after.per_kind()["compute"].wape < 1e-6
