@@ -1,0 +1,99 @@
+"""Serving-simulator throughput: graph build must stay O(requests·tokens).
+
+Workload: seeded Poisson traffic lowered under continuous batching with
+chunked prefill (the densest policy — per-step gates, slot lanes, chunk
+tasks) at two sizes, then simulated.  Timed stages:
+
+* ``build`` — :func:`repro.serving.build_serving_graph` (the policy loop
+  plays the workload forward and emits the graph);
+* ``simulate`` — the event engine over the generated graph.
+
+Acceptance (wired into CI):
+
+* scaling gate: per-task build cost at the large size <= 2.5x the small
+  size — a super-linear regression in admission, slot bookkeeping, or
+  gate wiring blows past it (this is the O(requests·tokens) guard);
+* floor gate: simulation sustains >= 20k simulated events/s on the
+  serving graph (it is lane-heavy: slots + sched + device + arrivals);
+* correctness smoke: token conservation and the static drain-time
+  invariant, asserted here so a broken build cannot post numbers.
+
+CSV: stage,requests,tasks,seconds,tasks_per_sec,per_task_vs_small
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import simulate
+from repro.serving import (ServingCostModel, ServingPolicy,
+                           build_serving_graph, explicit_workload,
+                           poisson_workload)
+
+from benchmarks.common import fmt_csv
+
+COST = ServingCostModel()
+POLICY = ServingPolicy(mode="continuous", slots=16, prefill_chunk=64)
+# rate scales the request count at fixed duration; output_mean scales the
+# decode-token count per request
+SIZES = {"small": 100.0, "large": 500.0}
+DURATION = 1.0
+SCALING_GATE = 2.5
+FLOOR_EVENTS_PER_SEC = 20_000.0
+
+
+def _time_stage(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return time.perf_counter() - t0, out
+
+
+def run() -> str:
+    # ---- correctness smoke: drain invariant + token conservation ------
+    slots, prompt, budget = 4, 100, 16
+    wl0 = explicit_workload([(0.0, prompt, budget)] * slots)
+    sg0 = build_serving_graph(wl0, COST,
+                              ServingPolicy(mode="static", slots=slots))
+    kv = slots * (prompt + budget)
+    analytic = slots * COST.prefill_time(prompt) \
+        + budget * COST.decode_step_time(slots, kv)
+    got = simulate(sg0.graph).makespan
+    assert abs(got - analytic) <= 1e-12 * analytic, (
+        f"static drain invariant broken: {got} vs {analytic}")
+
+    rows = []
+    per_task = {}
+    for name, rate in SIZES.items():
+        wl = poisson_workload(rate, DURATION, seed=7, prompt_mean=128,
+                              output_mean=64)
+        t_build, sg = min((_time_stage(
+            lambda: build_serving_graph(wl, COST, POLICY))
+            for _ in range(2)), key=lambda p: p[0])
+        assert sg.tokens_emitted == {r.rid: r.output_tokens
+                                     for r in wl.requests}, \
+            "token conservation broken"
+        tasks = len(sg.graph.tasks())
+        per_task[name] = t_build / tasks
+        rows.append(["build", len(wl), tasks, f"{t_build:.3f}",
+                     f"{tasks / t_build:.0f}",
+                     f"{per_task[name] / per_task['small']:.2f}"])
+        t_sim, res = min((_time_stage(lambda: simulate(sg.graph))
+                          for _ in range(2)), key=lambda p: p[0])
+        rows.append(["simulate", len(wl), tasks, f"{t_sim:.3f}",
+                     f"{tasks / t_sim:.0f}", ""])
+        assert tasks / t_sim >= FLOOR_EVENTS_PER_SEC, (
+            f"serving simulation at {tasks / t_sim:.0f} events/s "
+            f"(floor: {FLOOR_EVENTS_PER_SEC:.0f})")
+
+    ratio = per_task["large"] / per_task["small"]
+    assert ratio <= SCALING_GATE, (
+        f"serving graph build scales super-linearly: per-task cost ratio "
+        f"{ratio:.2f} (gate: {SCALING_GATE})")
+
+    return fmt_csv(
+        rows, ["stage", "requests", "tasks", "seconds", "tasks_per_sec",
+               "per_task_vs_small"])
+
+
+if __name__ == "__main__":
+    print(run())

@@ -24,6 +24,7 @@ BENCHES = {
     "traceio_import": "benchmarks.bench_traceio",
     "pipeline_plan": "benchmarks.bench_pipeline",
     "analysis_diag": "benchmarks.bench_analysis",
+    "serving_sim": "benchmarks.bench_serving",
 }
 
 

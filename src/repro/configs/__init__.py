@@ -1,5 +1,7 @@
 from .registry import (get_config, get_smoke_config, list_archs, SHAPES,
                        ShapeSpec, cells, runnable)
+from .serving import SERVING_COSTS, normalize_arch, serving_cost
 
 __all__ = ["get_config", "get_smoke_config", "list_archs", "SHAPES",
-           "ShapeSpec", "cells", "runnable"]
+           "ShapeSpec", "cells", "runnable",
+           "SERVING_COSTS", "normalize_arch", "serving_cost"]

@@ -1,0 +1,62 @@
+"""Per-model ServingCostModel defaults for the architecture registry.
+
+Every assigned arch gets an analytic :class:`repro.serving.ServingCostModel`
+derived from its exact :class:`~repro.models.model.ModelConfig` shape
+(:meth:`ServingCostModel.from_model_config`); archs that have been run
+through the :mod:`repro.serving.measure` timing harness additionally carry
+fitted constants in :data:`SERVING_COSTS` — the mapping the harness's
+``with_constants({...})`` reuse line pastes into.
+
+:func:`serving_cost` is the one-stop lookup the serving CLIs use; it
+accepts CLI-style underscore names (``llama3_405b``) as well as the
+registry's canonical dashed ids (``llama3-405b``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from .registry import ARCHS, _module
+
+# arch -> fitted {prefill_scale, decode_scale, step_overhead} from
+# `python -m repro.serving.measure --arch <id> --smoke`.  Measured on the
+# CPU smoke configs against TPU-v5e rooflines, hence the large scales —
+# re-run the harness on real hardware to re-seed; archs absent here use
+# the pure analytic model.
+SERVING_COSTS: Dict[str, Dict[str, float]] = {
+    "tinyllama-1.1b": {"prefill_scale": 3667.11, "decode_scale": 676.663,
+                       "step_overhead": 2e-05},
+}
+
+
+def normalize_arch(name: str) -> str:
+    """Map a CLI-style name (``llama3_405b``, ``llama3.2-1b``…) to the
+    registry's canonical arch id, via the same dash/dot folding the
+    config-module loader uses."""
+    if name in ARCHS:
+        return name
+    folded = _module(name)
+    for arch in ARCHS:
+        if _module(arch) == folded:
+            return arch
+    raise KeyError(f"unknown architecture {name!r}; known: {ARCHS}")
+
+
+def serving_cost(name: str, hw=None, *, smoke: bool = False,
+                 fitted: bool = True):
+    """The arch's :class:`repro.serving.ServingCostModel`: analytic shape
+    math plus (``fitted=True``) any harness-measured constants.
+
+    ``smoke=True`` prices the reduced smoke config instead (what the
+    measure harness actually ran on CPU).
+    """
+    from repro.core.task import TPU_V5E
+    from repro.serving.costs import ServingCostModel
+    from .registry import get_config, get_smoke_config
+    arch = normalize_arch(name)
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    model = ServingCostModel.from_model_config(cfg, hw or TPU_V5E)
+    consts = SERVING_COSTS.get(arch) if fitted else None
+    if consts:
+        model = model.with_constants(consts)
+    return model

@@ -33,7 +33,8 @@ from .task import (Task, TaskKind, HardwareSpec, TPU_V5E, HOST_THREAD,
                    p2p_channel, worker_thread, split_worker_thread)
 from .graph import DependencyGraph, GraphError
 from .simulate import (simulate, simulate_reference, SimResult,
-                       default_schedule, make_priority_schedule)
+                       default_schedule, lane_utilization,
+                       make_priority_schedule)
 from .cluster import (ClusterGraph, ClusterResult, WorkerSpec,
                       match_collective_gid_groups, match_collective_groups,
                       match_push_pull_groups, match_wired_p2p)
@@ -57,7 +58,7 @@ __all__ = [
     "p2p_channel", "worker_thread", "split_worker_thread",
     "DependencyGraph", "GraphError",
     "simulate", "simulate_reference", "SimResult",
-    "default_schedule", "make_priority_schedule",
+    "default_schedule", "lane_utilization", "make_priority_schedule",
     "ClusterGraph", "ClusterResult", "WorkerSpec",
     "match_collective_gid_groups", "match_collective_groups",
     "match_push_pull_groups", "match_wired_p2p",

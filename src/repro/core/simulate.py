@@ -114,6 +114,19 @@ class SimResult:
         return other.makespan / self.makespan if self.makespan > 0 else float("inf")
 
 
+def lane_utilization(result: SimResult) -> Dict[str, float]:
+    """Per-lane busy fraction of the makespan, from ``thread_busy``.
+
+    A lane (simulator thread) at 1.0 worked the entire timeline; serving
+    predictions report this per batch-slot lane to show how a policy keeps
+    (or starves) its slots.  Zero-makespan results report 0.0 everywhere.
+    """
+    if result.makespan <= 0:
+        return {th: 0.0 for th in result.thread_busy}
+    return {th: busy / result.makespan
+            for th, busy in result.thread_busy.items()}
+
+
 def _interval_union(intervals: List[Tuple[float, float]]) -> List[Tuple[float, float]]:
     if not intervals:
         return []

@@ -333,6 +333,40 @@ def trace_report(args) -> None:
         print(export_prediction(pred, tf, cg, args.export_trace))
 
 
+def serving_report(args) -> None:
+    """``--serving`` route: open-loop request simulation on ``--arch``.
+
+    Builds a seeded Poisson workload, prices it with the arch's registered
+    :func:`repro.configs.serving_cost`, and prints the latency/goodput
+    table for baseline + ``--what-if`` stack — no compilation, no serving.
+
+        PYTHONPATH=src python -m repro.launch.perf_report --serving \\
+            --arch tinyllama-1.1b --rate 50 --duration 5 \\
+            --what-if 'continuous_batching,tp:degree=8'
+    """
+    from repro.configs import normalize_arch, serving_cost
+    from repro.serving import (ServingPolicy, ServingScenario,
+                               format_serving_table, poisson_workload)
+    if not args.arch:
+        raise SystemExit("--serving needs --arch")
+    arch = normalize_arch(args.arch)
+    wl = poisson_workload(args.rate, args.duration, seed=0)
+    scn = ServingScenario(workload=wl, policy=ServingPolicy(mode="static"),
+                          serving_cost=serving_cost(arch))
+    preds = [scn.predict("noop")]
+    if args.what_if:
+        preds.append(scn.predict(args.what_if))
+    print(f"== serving {arch}: {len(wl)} requests, "
+          f"{wl.offered_rate():.1f} req/s offered ==")
+    print(format_serving_table(preds))
+    if args.critical_path:
+        print(preds[-1].critical_path.format())
+    if args.export_trace:
+        from repro.traceio import export_graph_trace
+        p = preds[-1]
+        print(export_graph_trace(p.graph, p.result, args.export_trace))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -366,8 +400,22 @@ def main() -> None:
                          "chain with compute/comm/host/idle attribution "
                          "(repro.analysis; composes with --what-if, "
                          "--cluster, and --trace-dir)")
+    ap.add_argument("--serving", action="store_true",
+                    help="serving route: simulate an open-loop request "
+                         "workload on --arch instead of compiling a "
+                         "training cell; --what-if takes serving stacks "
+                         "(continuous_batching, chunked_prefill, tp, ...) "
+                         "— see repro.launch.serve_sim for the full knob "
+                         "surface")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="(--serving) Poisson arrival rate, req/s")
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="(--serving) arrival window, seconds")
     args = ap.parse_args()
 
+    if args.serving:
+        serving_report(args)
+        return
     if args.trace_dir:
         trace_report(args)
         return

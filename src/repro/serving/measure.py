@@ -1,0 +1,120 @@
+"""Tiny timing harness: fit ServingCostModel constants from the seed engine.
+
+Runs the seed :class:`repro.serve.ServeEngine`'s *jitted* prefill and
+decode steps (the exact compiled functions the real engine loops over) a
+handful of times, measures wall-clock, and solves the analytic
+:class:`~repro.serving.costs.ServingCostModel` rooflines for
+``prefill_scale`` / ``decode_scale`` — the same measure-once/reuse-forever
+contract as ``CostModel.with_constants``: the harness prints the
+``ServingCostModel.from_model_config(...).with_constants({...})`` line to
+paste into :data:`repro.configs.serving.SERVING_COSTS`.
+
+Usage (CPU-friendly on the smoke configs)::
+
+    python -m repro.serving.measure --arch tinyllama-1.1b --smoke
+
+Constants are fitted against whatever backend jax runs on; the per-arch
+defaults shipped in :mod:`repro.configs.serving` were seeded with this
+harness on the smoke configs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, Tuple
+
+from repro.core.task import TPU_V5E, HardwareSpec
+from .costs import ServingCostModel
+
+
+def _time(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock of ``fn(*args)`` with block_until_ready."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def measure_serving_costs(arch: str = "tinyllama-1.1b", *,
+                          smoke: bool = True, prompt_tokens: int = 32,
+                          batch: int = 2, max_seq: int = 64,
+                          hw: HardwareSpec = TPU_V5E
+                          ) -> Tuple[ServingCostModel, Dict[str, float]]:
+    """Measure the jitted prefill/decode of ``arch``'s (smoke) config and
+    return the fitted model plus the constants mapping.
+
+    The fit solves each roofline for its scale with the fixed per-step
+    overhead pinned to ``hw.host_dispatch``::
+
+        scale = (measured - overhead) / roofline(shape)
+
+    which is exact for one measurement per kernel — the harness's job is a
+    sane default, not a regression; :mod:`repro.analysis.calibrate`-style
+    trace fitting can refine it later.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config, get_smoke_config
+    from repro.serve.engine import ServeEngine
+    from repro.models.model import build_model
+
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_seq=max_seq)
+
+    toks = jnp.asarray(np.ones((batch, prompt_tokens), np.int32))
+    t_prefill = _time(eng._prefill, params, {"tokens": toks})
+    logits, cache = eng._prefill(params, {"tokens": toks})
+    cache = eng._grow_cache(cache, prompt_tokens)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    pos = jnp.asarray(prompt_tokens, jnp.int32)
+    t_decode = _time(lambda: eng._decode(params, cache, nxt, pos))
+
+    # analytic model for the *measured* config, so the rooflines match
+    # the shapes we actually ran
+    analytic = ServingCostModel.from_model_config(cfg, hw)
+    overhead = hw.host_dispatch
+    pf_roof = (analytic.prefill_time(prompt_tokens) - analytic.step_overhead
+               ) / analytic.prefill_scale
+    kv = batch * prompt_tokens
+    dc_roof = (analytic.decode_step_time(batch, kv) - analytic.step_overhead
+               ) / analytic.decode_scale
+    consts = {
+        "prefill_scale": max(1e-3, (t_prefill - overhead) / pf_roof),
+        "decode_scale": max(1e-3, (t_decode - overhead) / dc_roof),
+        "step_overhead": overhead,
+    }
+    return analytic.with_constants(consts), consts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fit ServingCostModel constants from the seed "
+                    "ServeEngine's jitted prefill/decode wall-clock")
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="measure the CPU-sized smoke config")
+    ap.add_argument("--prompt-tokens", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=2)
+    args = ap.parse_args(argv)
+    fitted, consts = measure_serving_costs(
+        args.arch, smoke=args.smoke, prompt_tokens=args.prompt_tokens,
+        batch=args.batch)
+    c = ", ".join(f"{k!r}: {v:.6g}" for k, v in consts.items())
+    print(f"# measured {args.arch}"
+          f"{' (smoke config)' if args.smoke else ''}; reuse with:")
+    print(f"ServingCostModel.from_model_config("
+          f"get_config({args.arch!r})).with_constants({{{c}}})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
