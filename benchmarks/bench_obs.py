@@ -1,0 +1,137 @@
+"""Observability overhead gates: O(events) timeline build, free disabled spans.
+
+Two contracts, both asserted so CI fails on regression:
+
+* **Timeline build is O(events)** — :func:`repro.obs.compute_timelines`
+  walks the graph once (busy/utilization/queue/comm/memory deltas) and
+  sorts per-series change points.  Per-event cost on a ~50k-task wide
+  graph must stay within 2.5x of a ~10k-task graph (a superlinear scan
+  or per-task re-walk blows well past that).
+* **Disabled spans are free** — ``repro.obs.span()`` with telemetry off
+  must cost <= 1.05x on a span-per-iteration simulate loop (the
+  ``Scenario.sweep``/``ClusterGraph.retune`` wiring pattern).  Paired
+  interleaved timings with the GC paused, same discipline as
+  ``bench_sim.py``'s binding gate.
+
+Also smoke-checks the enabled path: spans configured at a JSONL sink
+actually land there, nested, with attrs.
+
+CSV: metric,events,seconds,per_event_us,gate
+"""
+
+from __future__ import annotations
+
+import gc
+import json
+import os
+import tempfile
+import time
+
+from repro.core import simulate
+from repro.obs import compute_timelines, span
+from repro.obs import spans as _spans
+
+from benchmarks.bench_sim import wide_graph
+from benchmarks.common import fmt_csv
+
+gate_margins = None     # populated by run(); surfaced by run.py --json
+
+
+def _time(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _timeline_cost(n_lanes: int, per_lane: int):
+    g = wide_graph(n_lanes=n_lanes, per_lane=per_lane)
+    res = simulate(g)
+    acts = {f"l{i}": 1e6 for i in range(n_lanes)}
+    t = min(_time(lambda: compute_timelines(
+        g, res, activation_bytes=acts)) for _ in range(3))
+    return len(g), t
+
+
+def run() -> str:
+    global gate_margins
+    rows = []
+
+    # -------------------------------------------- O(events) timeline gate
+    n_small, t_small = _timeline_cost(96, 104)      # ~10k tasks
+    n_big, t_big = _timeline_cost(96, 520)          # ~50k tasks
+    per_small = t_small / n_small
+    per_big = t_big / n_big
+    ratio = per_big / per_small
+    assert ratio <= 2.5, (
+        f"timeline build per-event cost grew {ratio:.2f}x from {n_small} "
+        f"to {n_big} events (acceptance: <= 2.5x — compute_timelines must "
+        f"stay a single O(V+E) walk plus per-series sorts)")
+    rows.append(["timeline_build", n_small, f"{t_small:.4f}",
+                 f"{per_small * 1e6:.3f}", ""])
+    rows.append(["timeline_build", n_big, f"{t_big:.4f}",
+                 f"{per_big * 1e6:.3f}", f"ratio={ratio:.2f}x<=2.5x"])
+
+    # ----------------------------------------- disabled-span overhead gate
+    assert not _spans.enabled(), (
+        "span telemetry is enabled (REPRO_TELEMETRY set?) — the disabled-"
+        "overhead gate must run with it off")
+    g = wide_graph(n_lanes=24, per_lane=104)        # ~2.5k tasks, ~ms sim
+
+    def plain():
+        simulate(g)
+
+    def spanned():
+        with span("bench.iteration", tasks=len(g)):
+            simulate(g)
+
+    plain(); spanned()                              # warm
+    gc.collect()
+    gc.disable()
+    try:
+        t_plain, t_span = [], []
+        for _ in range(7):
+            t_plain.append(_time(plain))
+            t_span.append(_time(spanned))
+    finally:
+        gc.enable()
+    overhead = min(t_span) / min(t_plain)
+    assert overhead <= 1.05, (
+        f"disabled span() costs {overhead:.3f}x the bare loop "
+        f"(acceptance: <= 1.05x — the off path must stay one module-"
+        f"global None check returning the shared no-op)")
+    n = len(g)
+    rows.append(["span_disabled", n, f"{min(t_span):.4f}",
+                 f"{min(t_span) / n * 1e6:.3f}",
+                 f"overhead={overhead:.3f}x<=1.05x"])
+
+    # ------------------------------------------------- enabled-path smoke
+    fd, path = tempfile.mkstemp(suffix=".jsonl")
+    os.close(fd)
+    try:
+        _spans.configure(path)
+        with span("bench.outer", depth=1):
+            with span("bench.inner", depth=2):
+                pass
+        _spans.configure(None)
+        with open(path) as f:
+            recs = [json.loads(line) for line in f]
+    finally:
+        _spans.configure(None)
+        os.unlink(path)
+    assert [r["span"] for r in recs] == \
+        ["bench.outer.bench.inner", "bench.outer"], (
+        f"enabled spans mis-stacked: {recs}")
+    rows.append(["span_enabled_smoke", len(recs), "", "", "nested-ok"])
+
+    gate_margins = {
+        "timeline_per_event_ratio": {"value": round(ratio, 3),
+                                     "limit": 2.5},
+        "span_disabled_overhead": {"value": round(overhead, 4),
+                                   "limit": 1.05},
+    }
+    return fmt_csv(rows, ["metric", "events", "seconds", "per_event_us",
+                          "gate"])
+
+
+if __name__ == "__main__":
+    print(run())

@@ -31,6 +31,8 @@ from repro.core import (ClusterGraph, DependencyGraph, Task, TaskKind,
 
 from benchmarks.common import fmt_csv
 
+gate_margins = None     # populated by run(); surfaced by run.py --json
+
 
 def wide_graph(n_lanes: int = 96, per_lane: int = 520,
                seed: int = 0) -> DependencyGraph:
@@ -77,6 +79,7 @@ def _time(fn, *args) -> float:
 
 
 def run() -> str:
+    global gate_margins
     rows = []
 
     g = wide_graph()
@@ -86,8 +89,9 @@ def run() -> str:
     r_fast = simulate(g)
     r_slow = simulate_reference(g)
     assert abs(r_fast.makespan - r_slow.makespan) < 1e-9, "engines disagree"
+    wide_speedup = t_slow / t_fast
     rows.append(["wide", n, "event", f"{t_fast:.3f}", f"{n / t_fast:.0f}",
-                 f"{t_slow / t_fast:.1f}"])
+                 f"{wide_speedup:.1f}"])
     rows.append(["wide", n, "legacy", f"{t_slow:.3f}", f"{n / t_slow:.0f}",
                  "1.0"])
 
@@ -135,6 +139,11 @@ def run() -> str:
     rows.append(["cluster8", ns, "legacy", f"{t_s8:.3f}", f"{ns / t_s8:.0f}",
                  "1.0"])
 
+    gate_margins = {
+        "binding_overhead": {"value": round(overhead, 4), "limit": 1.10},
+        "engine_speedup_wide": {"value": round(wide_speedup, 2),
+                                "floor": 5.0},
+    }
     return fmt_csv(rows, ["workload", "tasks", "engine", "seconds",
                           "tasks_per_sec", "speedup_vs_legacy"])
 

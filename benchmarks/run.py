@@ -1,13 +1,20 @@
 """Benchmark driver — one bench per paper table/figure + the roofline table.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig7,roofline]
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,roofline] [--json]
 
 Prints ``name,...`` CSV blocks and writes each to experiments/bench/.
+``--json`` additionally writes (merging into, so per-bench ``--only`` CI
+steps accumulate) a ``BENCH_<UTC-date>.json`` perf-trajectory snapshot:
+per-bench wall time, parsed CSV rows, and each bench's ``gate_margins``
+(how close the asserted perf gates ran to their limits) — the artifact CI
+uploads so regressions are visible as a trend, not just a red X.
 """
 
 from __future__ import annotations
 
 import argparse
+import datetime
+import json
 import os
 import time
 
@@ -25,19 +32,54 @@ BENCHES = {
     "pipeline_plan": "benchmarks.bench_pipeline",
     "analysis_diag": "benchmarks.bench_analysis",
     "serving_sim": "benchmarks.bench_serving",
+    "obs_telemetry": "benchmarks.bench_obs",
 }
+
+
+def _csv_rows(csv: str) -> list:
+    """Parse a bench's CSV block into row dicts (values stay strings)."""
+    lines = [ln for ln in csv.strip().splitlines() if ln.strip()]
+    if len(lines) < 2:
+        return []
+    header = [h.strip() for h in lines[0].split(",")]
+    return [dict(zip(header, [c.strip() for c in ln.split(",")]))
+            for ln in lines[1:]]
+
+
+def _write_snapshot(out_dir: str, results: dict) -> str:
+    """Merge ``results`` into today's ``BENCH_<UTC-date>.json``."""
+    date = datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%d")
+    path = os.path.join(out_dir, f"BENCH_{date}.json")
+    snap = {"schema": 1, "date": date, "benches": {}}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev.get("benches"), dict):
+                snap["benches"] = prev["benches"]
+        except (json.JSONDecodeError, OSError):
+            pass        # unreadable snapshot: start fresh, don't fail CI
+    snap["benches"].update(results)
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--out", default="experiments/bench")
+    ap.add_argument("--json", action="store_true",
+                    help="write/merge a BENCH_<UTC-date>.json perf-"
+                         "trajectory snapshot (per-bench metrics + gate "
+                         "margins) into --out")
     args = ap.parse_args()
     only = {s.strip() for s in args.only.split(",") if s.strip()}
     os.makedirs(args.out, exist_ok=True)
 
     import importlib
     failures = []
+    results = {}
     for name, modname in BENCHES.items():
         if only and not any(o in name for o in only):
             continue
@@ -49,11 +91,20 @@ def main() -> None:
         except Exception as e:  # report and continue
             failures.append((name, repr(e)))
             print(f"FAILED: {e!r}", flush=True)
+            results[name] = {"ok": False, "error": repr(e),
+                             "seconds": round(time.time() - t0, 3)}
             continue
+        dt = time.time() - t0
         print(csv, flush=True)
         with open(os.path.join(args.out, f"{name}.csv"), "w") as f:
             f.write(csv + "\n")
-        print(f"-- {name} done in {time.time()-t0:.1f}s --\n", flush=True)
+        results[name] = {"ok": True, "seconds": round(dt, 3),
+                         "rows": _csv_rows(csv),
+                         "gate_margins": getattr(mod, "gate_margins", None)}
+        print(f"-- {name} done in {dt:.1f}s --\n", flush=True)
+    if args.json and results:
+        path = _write_snapshot(args.out, results)
+        print(f"perf snapshot: {path}", flush=True)
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
 

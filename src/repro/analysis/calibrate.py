@@ -38,6 +38,7 @@ import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.costmodel import CostModel, FittableConstant
+from repro.obs.spans import span as _obs_span
 
 from .diff import TraceDiff, diff_cluster
 
@@ -263,34 +264,38 @@ def calibrate_scenario(scenario, traces: Any = None, *,
             break
         rounds += 1
         round_start = history[-1]
-        for name, const in all_constants.items():
-            if const.kind is not None:
-                pairs = [(d.predicted_dur, d.captured_dur)
-                         for d in last_diff.tasks if d.kind == const.kind]
-                ratio = _weighted_median_ratio(pairs)
-                proposal = min(max(current[name] * ratio, const.lo),
-                               const.hi)
-                if math.isclose(proposal, current[name], rel_tol=1e-9):
-                    continue
-                cand = cost.with_constants({**current, name: proposal})
-                cand_loss, cand_diff = evaluate(cand)
-                if cand_loss < history[-1]:
-                    current[name] = proposal
-                    cost = cand
-                    history.append(cand_loss)
-                    last_diff = cand_diff
-            else:
-                def probe(x, _name=name):
-                    return evaluate(
-                        cost.with_constants({**current, _name: x}))[0]
-                best_x, best_f = _golden_section(
-                    probe, const.lo, const.hi, probes_per_constant)
-                if best_f < history[-1] and not math.isclose(
-                        best_x, current[name], rel_tol=1e-9):
-                    current[name] = best_x
-                    cost = cost.with_constants({name: best_x})
-                    loss2, last_diff = evaluate(cost)
-                    history.append(loss2)
+        with _obs_span("calibrate.round", round=rounds,
+                       constants=len(all_constants)) as sp:
+            for name, const in all_constants.items():
+                if const.kind is not None:
+                    pairs = [(d.predicted_dur, d.captured_dur)
+                             for d in last_diff.tasks
+                             if d.kind == const.kind]
+                    ratio = _weighted_median_ratio(pairs)
+                    proposal = min(max(current[name] * ratio, const.lo),
+                                   const.hi)
+                    if math.isclose(proposal, current[name], rel_tol=1e-9):
+                        continue
+                    cand = cost.with_constants({**current, name: proposal})
+                    cand_loss, cand_diff = evaluate(cand)
+                    if cand_loss < history[-1]:
+                        current[name] = proposal
+                        cost = cand
+                        history.append(cand_loss)
+                        last_diff = cand_diff
+                else:
+                    def probe(x, _name=name):
+                        return evaluate(
+                            cost.with_constants({**current, _name: x}))[0]
+                    best_x, best_f = _golden_section(
+                        probe, const.lo, const.hi, probes_per_constant)
+                    if best_f < history[-1] and not math.isclose(
+                            best_x, current[name], rel_tol=1e-9):
+                        current[name] = best_x
+                        cost = cost.with_constants({name: best_x})
+                        loss2, last_diff = evaluate(cost)
+                        history.append(loss2)
+            sp.note(loss=history[-1])
         improved = round_start - history[-1]
         if improved <= tol * max(round_start, 1e-12):
             converged = True

@@ -79,6 +79,8 @@ import dataclasses
 from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
                     Union)
 
+from repro.obs.spans import span as _obs_span
+
 from .costmodel import CollectiveModel, CostModel
 from .graph import DependencyGraph, GraphError
 from .simulate import (ScheduleFn, SimResult, _host_device_breakdown,
@@ -447,24 +449,28 @@ class ClusterGraph:
         cls._check_mode(collective_mode, specs)
         cost = cost or CostModel()
         n = len(specs)
-        g = DependencyGraph()
-        cg = cls(g, specs, cost, schedule, collective_mode)
+        with _obs_span("cluster.build", workers=n, base_tasks=len(base),
+                       mode=collective_mode):
+            g = DependencyGraph()
+            cg = cls(g, specs, cost, schedule, collective_mode)
 
-        # 1. replicate: clone every task per worker, scale compute durations.
-        replicas = [cg._clone_worker(i, spec, base)
-                    for i, spec in enumerate(specs)]
-        if n > 1:
-            # 2. wire each base collective's replica group cross-worker.
-            for c in base.tasks():
-                if c.kind == TaskKind.COLLECTIVE and c.attrs.get("collective"):
-                    members = [remap[c.uid] for remap in replicas]
-                    cg._wire_group(c.attrs["collective"], members,
-                                   collective_mode)
-            cg._sync_push_pull(
-                [[(remap[push.uid], [remap[v.uid] for v in pulls])
-                  for remap in replicas]
-                 for ((push, pulls),) in match_push_pull_groups([base])])
-        return cg._finish()
+            # 1. replicate: clone every task per worker, scale compute
+            #    durations.
+            replicas = [cg._clone_worker(i, spec, base)
+                        for i, spec in enumerate(specs)]
+            if n > 1:
+                # 2. wire each base collective's replica group cross-worker.
+                for c in base.tasks():
+                    if c.kind == TaskKind.COLLECTIVE \
+                            and c.attrs.get("collective"):
+                        members = [remap[c.uid] for remap in replicas]
+                        cg._wire_group(c.attrs["collective"], members,
+                                       collective_mode)
+                cg._sync_push_pull(
+                    [[(remap[push.uid], [remap[v.uid] for v in pulls])
+                      for remap in replicas]
+                     for ((push, pulls),) in match_push_pull_groups([base])])
+            return cg._finish()
 
     @classmethod
     def from_worker_graphs(cls, graphs: Sequence[DependencyGraph],
@@ -509,6 +515,20 @@ class ClusterGraph:
                 f"spec(s); they must pair up 1:1")
         cls._check_mode(collective_mode, specs)
         cost = cost or CostModel()
+        with _obs_span("cluster.from_worker_graphs", workers=len(graphs),
+                       tasks=sum(len(wg) for wg in graphs),
+                       mode=collective_mode):
+            return cls._from_worker_graphs(graphs, specs, cost,
+                                           collective_mode, schedule,
+                                           start_skews)
+
+    @classmethod
+    def _from_worker_graphs(cls, graphs: List[DependencyGraph],
+                            specs: List[WorkerSpec], cost: CostModel,
+                            collective_mode: str,
+                            schedule: Optional[ScheduleFn],
+                            start_skews: Optional[Sequence[float]]
+                            ) -> "ClusterGraph":
         g = DependencyGraph()
         cg = cls(g, specs, cost, schedule, collective_mode)
         # fresh gids must not collide with gids the traces carried in
@@ -983,6 +1003,14 @@ class ClusterGraph:
         self.workers = specs
         coll = self.cost.collectives
         leg_dur: Dict[Tuple, float] = {}   # (ids, pos, payload)
+        with _obs_span("cluster.retune", workers=len(specs),
+                       records=len(self._prov)):
+            self._retune_records(specs, coll, leg_dur)
+        return self
+
+    def _retune_records(self, specs: Sequence[WorkerSpec],
+                        coll: CollectiveModel,
+                        leg_dur: Dict[Tuple, float]) -> None:
         for rec in self._prov:
             kind, t = rec[0], rec[1]
             if kind == "compute":
@@ -1014,7 +1042,6 @@ class ClusterGraph:
                 t.duration = coll.axis_time("all-reduce", shard, num_pods,
                                             "dcn") \
                     / max(specs[leader].bandwidth_scale, 1e-12)
-        return self
 
     # -------------------------------------------------------------- simulate
     def simulate(self, schedule: Optional[ScheduleFn] = None, *,

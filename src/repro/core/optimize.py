@@ -86,6 +86,8 @@ import typing
 from typing import (Any, Callable, ClassVar, Dict, List, Optional, Sequence,
                     Tuple, Union)
 
+from repro.obs.spans import span as _span
+
 from .cluster import ClusterGraph, ClusterResult, WorkerSpec, _as_specs
 from .costmodel import CollectiveModel, CostModel
 from .graph import DependencyGraph
@@ -314,6 +316,12 @@ class Scenario:
         from repro.analysis.calibrate import calibrate_scenario
         return calibrate_scenario(self, traces, **kwargs)
 
+    def _byte_maps(self) -> Tuple[Optional[Dict[str, float]],
+                                  Optional[Dict[str, float]]]:
+        """What every Prediction carries so ``.timelines`` can size its
+        live-memory series without re-threading the scenario."""
+        return (self.activation_bytes, self.layer_grad_bytes)
+
     def _evaluate(self, opt: "Optimization", *,
                   baseline: Optional[float] = None,
                   point: Optional[Dict[str, Any]] = None,
@@ -340,7 +348,8 @@ class Scenario:
             cres = cg.simulate()
             return (Prediction(opt, base, cres.makespan, cres.global_result,
                                cres, point or {}, graph=cg.graph,
-                               schedule=cg.schedule), tfs[0], cg)
+                               schedule=cg.schedule,
+                               byte_maps=self._byte_maps()), tfs[0], cg)
         tf = opt.apply(self)
         if self.is_cluster:
             cg = ClusterGraph.build(tf.graph, self.specs, cost=self.cost,
@@ -349,10 +358,12 @@ class Scenario:
             cres = cg.simulate()
             return (Prediction(opt, base, cres.makespan, cres.global_result,
                                cres, point or {}, graph=cg.graph,
-                               schedule=cg.schedule), tf, cg)
+                               schedule=cg.schedule,
+                               byte_maps=self._byte_maps()), tf, cg)
         res = tf.simulate()
         return Prediction(opt, base, res.makespan, res, None, point or {},
-                          graph=tf.graph, schedule=tf.schedule), \
+                          graph=tf.graph, schedule=tf.schedule,
+                          byte_maps=self._byte_maps()), \
             tf, None
 
     # ------------------------------------------------------ pipeline route
@@ -418,7 +429,8 @@ class Scenario:
             else GraphTransform(templates[0], copy=False)
         return (Prediction(opt, base, cres.makespan, cres.global_result,
                            cres, dict(point), graph=cg.graph,
-                           schedule=cg.schedule), out_tf, cg)
+                           schedule=cg.schedule,
+                           byte_maps=self._byte_maps()), out_tf, cg)
 
     def _pipeline_specs(self, plan: Any) -> List[WorkerSpec]:
         """Worker specs for a plan: the scenario's list must pair 1:1 with
@@ -470,7 +482,7 @@ class Scenario:
         preds: List[Prediction] = []
         cache: Dict[str, Any] = {"opt": None, "scn": None, "tf": None,
                                  "cg": None}
-        for pt in points:
+        for i, pt in enumerate(points):
             opt_params = {k: v for k, v in pt.items() if k in opt_names}
             over = {k: v for k, v in pt.items()
                     if k in _SCENARIO_OVERRIDES and k not in opt_names}
@@ -483,30 +495,38 @@ class Scenario:
                     f"{list(_SCENARIO_OVERRIDES)}")
             popt = base_opt.with_params(**opt_params)
             scn = dataclasses.replace(self, **over) if over else self
-            pred = None
-            if reuse and cache["cg"] is not None \
-                    and self._cluster_reusable(popt, scn, cache):
-                cache["cg"].retune(scn.specs)
-                cres = cache["cg"].simulate()
-                pred = Prediction(popt, base, cres.makespan,
-                                  cres.global_result, cres, dict(pt),
-                                  graph=cache["cg"].graph,
-                                  schedule=cache["cg"].schedule)
-                cache["opt"], cache["scn"] = popt, scn
-            elif reuse and cache["tf"] is not None and not over \
-                    and scn is self and not scn.is_cluster \
-                    and type(popt) is type(cache["opt"]) \
-                    and popt.retune(scn, cache["tf"], cache["opt"]):
-                res = simulate(cache["tf"].graph, cache["tf"].schedule)
-                pred = Prediction(popt, base, res.makespan, res, None,
-                                  dict(pt), graph=cache["tf"].graph,
-                                  schedule=cache["tf"].schedule)
-                cache["opt"] = popt
-            if pred is None:
-                pred, tf, cg = scn._evaluate(popt, baseline=base,
-                                             point=dict(pt), reuse=reuse)
-                if reuse:
-                    cache.update(opt=popt, scn=scn, tf=tf, cg=cg)
+            with _span("scenario.sweep_point", opt=base_opt.name,
+                       index=i, total=len(points)) as sp:
+                pred = None
+                if reuse and cache["cg"] is not None \
+                        and self._cluster_reusable(popt, scn, cache):
+                    sp.note(route="cluster_retune")
+                    cache["cg"].retune(scn.specs)
+                    cres = cache["cg"].simulate()
+                    pred = Prediction(popt, base, cres.makespan,
+                                      cres.global_result, cres, dict(pt),
+                                      graph=cache["cg"].graph,
+                                      schedule=cache["cg"].schedule,
+                                      byte_maps=scn._byte_maps())
+                    cache["opt"], cache["scn"] = popt, scn
+                elif reuse and cache["tf"] is not None and not over \
+                        and scn is self and not scn.is_cluster \
+                        and type(popt) is type(cache["opt"]) \
+                        and popt.retune(scn, cache["tf"], cache["opt"]):
+                    sp.note(route="transform_retune")
+                    res = simulate(cache["tf"].graph, cache["tf"].schedule)
+                    pred = Prediction(popt, base, res.makespan, res, None,
+                                      dict(pt), graph=cache["tf"].graph,
+                                      schedule=cache["tf"].schedule,
+                                      byte_maps=scn._byte_maps())
+                    cache["opt"] = popt
+                if pred is None:
+                    sp.note(route="rebuild")
+                    pred, tf, cg = scn._evaluate(popt, baseline=base,
+                                                 point=dict(pt),
+                                                 reuse=reuse)
+                    if reuse:
+                        cache.update(opt=popt, scn=scn, tf=tf, cg=cg)
             preds.append(pred)
         return preds
 
@@ -547,7 +567,14 @@ class Prediction:
         default=None, repr=False, compare=False)
     schedule: Optional[Any] = dataclasses.field(
         default=None, repr=False, compare=False)
+    # (activation_bytes, layer_grad_bytes) from the evaluating scenario —
+    # what sizes Prediction.timelines' live-memory series
+    byte_maps: Optional[Tuple[Optional[Dict[str, float]],
+                              Optional[Dict[str, float]]]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
     _cp: Optional[Any] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+    _timelines: Optional[Any] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
 
     @property
@@ -585,6 +612,31 @@ class Prediction:
                     f"Scenario.predict to get its critical path")
             self._cp = cp
         return self._cp
+
+    @property
+    def timelines(self):
+        """Counter timelines of the predicted timeline
+        (:class:`repro.obs.TimelineSet`): per-lane busy/utilization,
+        ready-queue depth, COMM bytes in flight, and — when the scenario
+        carries byte maps — per-worker live memory.  Derived lazily from
+        the carried graph + result; like :attr:`critical_path`, raises
+        instead of lying when a later sweep point retuned the shared
+        build in place.
+        """
+        if self._timelines is None:
+            if self.graph is None:
+                raise OptimizationError(
+                    "this Prediction does not carry its evaluated graph; "
+                    "re-evaluate via Scenario.predict/evaluate")
+            from repro.obs import compute_timelines
+            acts, grads = self.byte_maps or (None, None)
+            try:
+                self._timelines = compute_timelines(
+                    self.graph, self.cluster or self.result,
+                    activation_bytes=acts, layer_grad_bytes=grads)
+            except ValueError as e:
+                raise OptimizationError(str(e)) from e
+        return self._timelines
 
     def __repr__(self) -> str:
         tag = f" point={self.point}" if self.point else ""

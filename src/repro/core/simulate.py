@@ -114,46 +114,12 @@ class SimResult:
         return other.makespan / self.makespan if self.makespan > 0 else float("inf")
 
 
-def lane_utilization(result: SimResult) -> Dict[str, float]:
-    """Per-lane busy fraction of the makespan, from ``thread_busy``.
-
-    A lane (simulator thread) at 1.0 worked the entire timeline; serving
-    predictions report this per batch-slot lane to show how a policy keeps
-    (or starves) its slots.  Zero-makespan results report 0.0 everywhere.
-    """
-    if result.makespan <= 0:
-        return {th: 0.0 for th in result.thread_busy}
-    return {th: busy / result.makespan
-            for th, busy in result.thread_busy.items()}
-
-
-def _interval_union(intervals: List[Tuple[float, float]]) -> List[Tuple[float, float]]:
-    if not intervals:
-        return []
-    intervals = sorted(intervals)
-    out = [intervals[0]]
-    for s, e in intervals[1:]:
-        ls, le = out[-1]
-        if s <= le:
-            out[-1] = (ls, max(le, e))
-        else:
-            out.append((s, e))
-    return out
-
-
-def _overlap(a: List[Tuple[float, float]], b: List[Tuple[float, float]]) -> float:
-    i = j = 0
-    tot = 0.0
-    while i < len(a) and j < len(b):
-        s = max(a[i][0], b[j][0])
-        e = min(a[i][1], b[j][1])
-        if e > s:
-            tot += e - s
-        if a[i][1] < b[j][1]:
-            i += 1
-        else:
-            j += 1
-    return tot
+# Busy-interval math lives in repro.obs.timeline (one implementation for
+# the engine breakdown, serving lane reports, and counter timelines); the
+# historical names stay importable from here.
+from repro.obs.timeline import interval_overlap as _overlap          # noqa: E402
+from repro.obs.timeline import interval_union as _interval_union     # noqa: E402
+from repro.obs.timeline import lane_utilization                      # noqa: E402,F401
 
 
 def _host_device_breakdown(busy_intervals: Dict[str, List[Tuple[float, float]]],

@@ -51,7 +51,21 @@ def main() -> None:
                          "(repro.analysis.calibrate) and print the "
                          "before/after fidelity table; the diagnosis "
                          "below then runs on the calibrated model")
+    ap.add_argument("--timeline", action="store_true",
+                    help="print counter-timeline rollups (per-worker "
+                         "utilization, peak live memory, ready-queue "
+                         "depth, COMM bytes in flight — repro.obs) next "
+                         "to the critical path")
+    ap.add_argument("--telemetry", default="",
+                    help="append the tool's own span telemetry (import, "
+                         "build, calibrate timings) as JSONL to this "
+                         "path (repro.obs.spans; same as "
+                         "REPRO_TELEMETRY=<path>)")
     args = ap.parse_args()
+
+    if args.telemetry:
+        from repro import obs
+        obs.configure(args.telemetry)
 
     from repro.analysis import (diff_prediction, format_opportunity_table,
                                 rank_opportunities)
@@ -69,6 +83,9 @@ def main() -> None:
         diff = diff_prediction(pred, tf, cg, imp)
         print(diff.format(top=args.top))
     print(pred.critical_path.format(top=args.top))
+    if args.timeline:
+        from repro.obs import format_timeline_report
+        print(format_timeline_report(pred.timelines))
     print(format_cluster_report(pred.cluster,
                                 title=f"imported cluster x{n}"))
 
@@ -84,6 +101,9 @@ def main() -> None:
         print(f"predicted : {wpred.predicted * 1e3:10.3f} ms "
               f"({wpred.speedup:.2f}x)")
         print(wpred.critical_path.format(top=args.top))
+        if args.timeline:
+            from repro.obs import format_timeline_report
+            print(format_timeline_report(wpred.timelines))
 
 
 if __name__ == "__main__":

@@ -184,7 +184,8 @@ def build_scenario(module, cfg, cost, *, workers=1, straggler: str = ""):
 
 def cluster_whatif_report(module, cfg, cost, *, workers: int,
                           straggler: str = "",
-                          critical_path: bool = False) -> str:
+                          critical_path: bool = False,
+                          timeline: bool = False) -> str:
     """Cluster-simulate the compiled step across ``workers`` replicas."""
     # validate the straggler spec before the (expensive) graph extraction
     if straggler:
@@ -196,6 +197,9 @@ def cluster_whatif_report(module, cfg, cost, *, workers: int,
     out = format_cluster_report(pred.cluster, title=title)
     if critical_path:
         out += "\n" + pred.critical_path.format()
+    if timeline:
+        from repro.obs import format_timeline_report
+        out += "\n" + format_timeline_report(pred.timelines)
     return out
 
 
@@ -206,11 +210,14 @@ def export_prediction(pred, tf, cg, dest: str) -> str:
     (a directory); single-graph routes write one file at ``dest``.
     """
     from repro import traceio
+    acts, grads = pred.byte_maps or (None, None)
     if cg is not None:
         # collectives (coll_gid) and point-to-point hops (p2p provenance)
         # both round-trip through --trace-dir re-import, pipeline
-        # placements included
-        paths = traceio.export_cluster_traces(cg, pred.cluster, dest)
+        # placements included; byte maps size the memory counter tracks
+        paths = traceio.export_cluster_traces(cg, pred.cluster, dest,
+                                              activation_bytes=acts,
+                                              layer_grad_bytes=grads)
         return (f"exported {len(paths)} per-worker Chrome traces to "
                 f"{dest}/ (open in https://ui.perfetto.dev; re-import with "
                 f"--trace-dir)")
@@ -219,13 +226,16 @@ def export_prediction(pred, tf, cg, dest: str) -> str:
     else:
         os.makedirs(dest, exist_ok=True)
         path = os.path.join(dest, "trace.json")
-    traceio.export_graph_trace(tf.graph, pred.result, path)
+    traceio.export_graph_trace(tf.graph, pred.result, path,
+                               activation_bytes=acts,
+                               layer_grad_bytes=grads)
     return f"exported Chrome trace to {path} (open in https://ui.perfetto.dev)"
 
 
 def whatif_stack_report(module, cfg, cost, spec: str, *, workers: int = 0,
                         straggler: str = "", export_trace: str = "",
-                        critical_path: bool = False) -> str:
+                        critical_path: bool = False,
+                        timeline: bool = False) -> str:
     """Evaluate a registry-parsed optimization stack on the compiled step.
 
     ``spec`` is the CLI form parsed against the optimization registry, e.g.
@@ -262,6 +272,9 @@ def whatif_stack_report(module, cfg, cost, spec: str, *, workers: int = 0,
             pred.cluster, title=title or f"cluster x{len(pred.cluster.workers)}"))
     if critical_path:
         lines.append(pred.critical_path.format())
+    if timeline:
+        from repro.obs import format_timeline_report
+        lines.append(format_timeline_report(pred.timelines))
     if export_trace:
         lines.append(export_prediction(pred, tf, cg, export_trace))
     return "\n".join(lines)
@@ -329,6 +342,9 @@ def trace_report(args) -> None:
                                 title=f"imported cluster x{n}"))
     if args.critical_path:
         print(pred.critical_path.format())
+    if args.timeline:
+        from repro.obs import format_timeline_report
+        print(format_timeline_report(pred.timelines))
     if args.export_trace:
         print(export_prediction(pred, tf, cg, args.export_trace))
 
@@ -361,6 +377,9 @@ def serving_report(args) -> None:
     print(format_serving_table(preds))
     if args.critical_path:
         print(preds[-1].critical_path.format())
+    if args.timeline:
+        from repro.obs import format_timeline_report
+        print(format_timeline_report(preds[-1].timelines))
     if args.export_trace:
         from repro.traceio import export_graph_trace
         p = preds[-1]
@@ -400,6 +419,16 @@ def main() -> None:
                          "chain with compute/comm/host/idle attribution "
                          "(repro.analysis; composes with --what-if, "
                          "--cluster, and --trace-dir)")
+    ap.add_argument("--timeline", action="store_true",
+                    help="print the predicted timeline's counter rollups "
+                         "(per-worker utilization, peak live memory, "
+                         "ready-queue depth, COMM bytes in flight — "
+                         "repro.obs; composes with every route)")
+    ap.add_argument("--telemetry", default="",
+                    help="append the tool's own span telemetry (import, "
+                         "build, retune, sweep, calibrate timings) as "
+                         "JSONL to this path (repro.obs.spans; same as "
+                         "REPRO_TELEMETRY=<path>)")
     ap.add_argument("--serving", action="store_true",
                     help="serving route: simulate an open-loop request "
                          "workload on --arch instead of compiling a "
@@ -413,6 +442,9 @@ def main() -> None:
                     help="(--serving) arrival window, seconds")
     args = ap.parse_args()
 
+    if args.telemetry:
+        from repro import obs
+        obs.configure(args.telemetry)
     if args.serving:
         serving_report(args)
         return
@@ -459,7 +491,8 @@ def main() -> None:
                                   workers=args.cluster,
                                   straggler=args.straggler,
                                   export_trace=args.export_trace,
-                                  critical_path=args.critical_path))
+                                  critical_path=args.critical_path,
+                                  timeline=args.timeline))
     elif args.cluster:
         if args.export_trace:
             # one evaluation feeds both the report and the export
@@ -470,17 +503,24 @@ def main() -> None:
             print(format_cluster_report(pred.cluster, title=title))
             if args.critical_path:
                 print(pred.critical_path.format())
+            if args.timeline:
+                from repro.obs import format_timeline_report
+                print(format_timeline_report(pred.timelines))
             print(export_prediction(pred, tf, cg, args.export_trace))
         else:
             print(cluster_whatif_report(module, cfg, cost,
                                         workers=args.cluster,
                                         straggler=args.straggler,
-                                        critical_path=args.critical_path))
-    elif args.export_trace or args.critical_path:
+                                        critical_path=args.critical_path,
+                                        timeline=args.timeline))
+    elif args.export_trace or args.critical_path or args.timeline:
         scenario, _ = build_scenario(module, cfg, cost)
         pred, tf, cg = scenario.evaluate("noop")
         if args.critical_path:
             print(pred.critical_path.format())
+        if args.timeline:
+            from repro.obs import format_timeline_report
+            print(format_timeline_report(pred.timelines))
         if args.export_trace:
             print(export_prediction(pred, tf, cg, args.export_trace))
     print(f"attention-loop bytes replaced: {tot['attn_bytes']/1e9:.1f} GB "

@@ -58,6 +58,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.graph import DependencyGraph
 from repro.core.task import Task, TaskKind, DEVICE_STREAM
+from repro.obs.spans import span as _obs_span
 from .costs import ServingCostModel
 from .workload import RequestSpec, Workload
 
@@ -224,16 +225,19 @@ def build_serving_graph(workload: Workload, cost: ServingCostModel,
     durations/FLOPs are per-chip; collectives carry the all-reduce payload
     for the cluster wiring.  O(requests + generated tokens) tasks.
     """
-    sharded = cost.parallel(policy.tp_degree)
-    em = _Emitter(workload, sharded, policy)
-    if policy.mode == "static":
-        batches = _static_loop(em, workload)
-    else:
-        batches = _continuous_loop(em, workload)
-    em.g.validate()
-    return ServingGraph(graph=em.g, workload=workload, policy=policy,
-                        cost=sharded, tokens_emitted=em.tokens,
-                        num_steps=em.num_steps, num_batches=batches)
+    with _obs_span("serving.graphgen", requests=len(workload.requests),
+                   mode=policy.mode, tp=policy.tp_degree) as sp:
+        sharded = cost.parallel(policy.tp_degree)
+        em = _Emitter(workload, sharded, policy)
+        if policy.mode == "static":
+            batches = _static_loop(em, workload)
+        else:
+            batches = _continuous_loop(em, workload)
+        em.g.validate()
+        sp.note(tasks=len(em.g), tokens=em.tokens)
+        return ServingGraph(graph=em.g, workload=workload, policy=policy,
+                            cost=sharded, tokens_emitted=em.tokens,
+                            num_steps=em.num_steps, num_batches=batches)
 
 
 # ---------------------------------------------------------------- static

@@ -347,11 +347,13 @@ class ServingScenario(Scenario):
             return (ServingPrediction(opt, base, cres.makespan,
                                       cres.global_result, cres, pt,
                                       graph=cg.graph, schedule=cg.schedule,
+                                      byte_maps=self._byte_maps(),
                                       **metrics), tf, cg)
         res = simulate(tf.graph, tf.schedule)
         metrics = serving_metrics(tf.graph, res, self.workload)
         return (ServingPrediction(opt, base, res.makespan, res, None, pt,
                                   graph=tf.graph, schedule=tf.schedule,
+                                  byte_maps=self._byte_maps(),
                                   **metrics), tf, None)
 
     def sweep(self, opt, grid, *, reuse: bool = True

@@ -52,6 +52,26 @@ drift term), and multi-worker sets that cannot be anchored at all warn by
 default — pass ``align="strict"`` to :func:`load_trace_dir` to make both
 conditions raise instead.
 
+Counter-track schema (``counters=True`` on the exporters, default): each
+worker's :class:`repro.obs.TimelineSet` is emitted as phase-``"C"``
+Chrome counter events — ``{"ph": "C", "name": <track>, "pid": <worker>,
+"tid": 0, "ts": <µs>, "args": {"value": <v>}}``, one sample per change
+point plus a closing sample at the makespan.  Tracks per worker:
+``utilization`` (busy-lane fraction, 0..1), ``ready_queue``
+(dependency-ready tasks awaiting dispatch; both always emitted),
+``memory_bytes`` (live activation+gradient bytes — present when the
+Scenario byte maps are passed through) and ``comm_bytes_in_flight``
+(present when the worker communicates).  Single-file exports of
+multi-worker graphs prefix track names with ``w<i>/``.  Every reader in
+this package (``read_chrome``, ``read_xla_trace``) skips ``"C"`` events,
+so counter-carrying files import byte-identically to counter-free ones
+and the round-trip invariant is untouched.
+
+Self-instrumentation: the import pipeline itself emits JSONL spans
+(``traceio.load_trace_dir`` and downstream ``cluster.from_worker_graphs``)
+when ``REPRO_TELEMETRY=<path>`` is set or a launch CLI passes
+``--telemetry PATH`` — see :mod:`repro.obs.spans`.
+
 User surface: ``Scenario(trace_dir=...)`` runs any registered optimization
 stack on imported traces; ``python -m repro.launch.perf_report --trace-dir
 DIR [--what-if STACK] [--export-trace OUT]`` is the CLI form, and
@@ -61,9 +81,10 @@ the capture (:mod:`repro.analysis.calibrate`).
 
 from .events import (TraceEvent, TraceImportError, WorkerTrace, classify,
                      infer_collective, read_jsonl, write_jsonl)
-from .chrome import (chrome_trace_dict, events_from_graph,
-                     export_cluster_traces, export_graph_trace,
-                     predicted_worker_events, read_chrome)
+from .chrome import (chrome_trace_dict, counter_track_events,
+                     events_from_graph, export_cluster_traces,
+                     export_graph_trace, predicted_worker_events,
+                     read_chrome)
 from .align import (ClockAlignment, align_traces, apply_alignment,
                     collective_end_anchors)
 from .importer import (ImportedCluster, find_worker_files, graph_from_events,
@@ -74,8 +95,9 @@ from .xla import find_xla_trace_files, load_xla_profile, read_xla_trace
 __all__ = [
     "TraceEvent", "TraceImportError", "WorkerTrace",
     "classify", "infer_collective", "read_jsonl", "write_jsonl",
-    "chrome_trace_dict", "events_from_graph", "export_cluster_traces",
-    "export_graph_trace", "predicted_worker_events", "read_chrome",
+    "chrome_trace_dict", "counter_track_events", "events_from_graph",
+    "export_cluster_traces", "export_graph_trace",
+    "predicted_worker_events", "read_chrome",
     "ClockAlignment", "align_traces", "apply_alignment",
     "collective_end_anchors",
     "ImportedCluster", "find_worker_files", "graph_from_events",

@@ -19,6 +19,9 @@ Reader contract (:func:`read_chrome`)
 * ``ph == "M"`` ``thread_name``/``process_name`` metadata names the
   threads; unnamed tids become ``t<tid>`` (prefixed ``p<pid>/`` when the
   file contains several pids).
+* ``ph == "C"`` counter events (the tracks our exporters emit — see
+  below) are *skipped*: they describe derived series, not tasks, so a
+  counter-carrying file imports byte-identically to its counter-free twin.
 * Dependencies: flow events (``ph`` in ``s``/``t``/``f``) keyed by
   ``(cat, id)``.  A flow binds to the slice named by ``args.bind`` (our
   export extension: the X event's ``args.id``); foreign traces fall back to
@@ -48,6 +51,14 @@ is how re-import (:func:`repro.core.cluster.match_wired_p2p`) re-wires
 pipeline stage boundaries and :mod:`repro.analysis.diff` matches hops
 task-by-task.  :func:`predicted_worker_events` exposes the collapsed
 per-worker timelines without writing files.
+
+Both exporters also emit Perfetto **counter tracks** (``counters=True``):
+phase-``"C"`` events sampling each worker's :class:`repro.obs.TimelineSet`
+at every change point — ``utilization`` (busy-lane fraction, 0..1),
+``ready_queue`` (dependency-ready tasks not yet dispatched),
+``comm_bytes_in_flight``, and ``memory_bytes`` (live activation+gradient
+bytes, present when byte maps are passed).  The reader skips them (above),
+so the round-trip invariant is untouched.
 """
 
 from __future__ import annotations
@@ -63,6 +74,8 @@ from repro.core.cluster import _RING_ROUNDS
 from repro.core.graph import DependencyGraph
 from repro.core.simulate import SimResult, simulate
 from repro.core.task import Task, TaskKind, split_worker_thread, _json_safe
+from repro.obs.timeline import (TimelineSet, check_result_fresh,
+                                compute_timelines)
 
 from .events import TraceEvent, TraceImportError, WorkerTrace
 
@@ -254,9 +267,52 @@ def events_from_graph(graph: DependencyGraph,
     return events
 
 
+def counter_track_events(timelines: TimelineSet, *,
+                         worker: Optional[int] = None,
+                         pid: int = 0) -> List[Dict[str, Any]]:
+    """Phase-``"C"`` Chrome counter events sampling ``timelines``.
+
+    One sample per change point plus a closing sample at the makespan —
+    exactly the piecewise-constant series, no resampling.  ``worker``
+    selects one worker's tracks under plain names (the per-worker cluster
+    export); ``None`` emits every worker, prefixing names with ``w<i>/``
+    when the set spans several workers (the single-file export).
+    """
+    from repro.obs.timeline import Timeline
+    workers = timelines.workers if worker is None else [worker]
+    prefix_names = worker is None and len(workers) > 1
+    flat = Timeline((), (), timelines.makespan)
+    out: List[Dict[str, Any]] = []
+    for w in workers:
+        prefix = f"w{w}/" if prefix_names else ""
+        # utilization/ready_queue always (a flat-zero queue is a finding:
+        # nothing ever waited); memory only when byte maps sized it, comm
+        # only when the worker communicated — absence is meaningful there
+        tracks = (("utilization", timelines.utilization.get(w, flat)),
+                  ("memory_bytes", timelines.memory.get(w)),
+                  ("ready_queue", timelines.queue_depth.get(w, flat)),
+                  ("comm_bytes_in_flight", timelines.comm_bytes.get(w)))
+        for name, tl in tracks:
+            if tl is None or (not len(tl)
+                              and name not in ("utilization",
+                                               "ready_queue")):
+                continue
+            for t, v in tl.samples():
+                out.append({"ph": "C", "name": prefix + name, "pid": pid,
+                            "tid": 0, "ts": t * _US, "args": {"value": v}})
+    return out
+
+
 def chrome_trace_dict(events: Sequence[TraceEvent], *, pid: int = 0,
-                      process_name: str = "worker0") -> Dict[str, Any]:
-    """Chrome trace-event JSON object for ``events`` (one process)."""
+                      process_name: str = "worker0",
+                      counters: Optional[Sequence[Dict[str, Any]]] = None
+                      ) -> Dict[str, Any]:
+    """Chrome trace-event JSON object for ``events`` (one process).
+
+    ``counters`` are pre-built phase-``"C"`` dicts
+    (:func:`counter_track_events`) appended after the slices; the reader
+    skips them on re-import.
+    """
     tids: Dict[str, int] = {}
     out: List[Dict[str, Any]] = [
         {"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
@@ -299,20 +355,35 @@ def chrome_trace_dict(events: Sequence[TraceEvent], *, pid: int = 0,
             out.append({"ph": "f", "cat": "dep", "name": "dep", "id": fid,
                         "bp": "e", "pid": pid, "tid": tids[ev.thread],
                         "ts": ev.ts * _US, "args": {"bind": ev.eid}})
+    if counters:
+        out.extend(counters)
     return {"traceEvents": out, "displayTimeUnit": "ms"}
 
 
 def export_graph_trace(graph: DependencyGraph,
                        result: Optional[SimResult] = None,
                        path: Optional[str] = None, *,
-                       process_name: str = "worker0") -> Dict[str, Any]:
+                       process_name: str = "worker0",
+                       counters: bool = True,
+                       activation_bytes: Optional[Dict[str, float]] = None,
+                       layer_grad_bytes: Optional[Dict[str, float]] = None
+                       ) -> Dict[str, Any]:
     """Export one graph's simulated timeline as Chrome trace JSON.
 
     Returns the trace dict; writes it to ``path`` when given.  Open the
     file in Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``.
+    ``counters=True`` adds utilization/queue/comm counter tracks (plus
+    live ``memory_bytes`` when byte maps are passed — the schema in the
+    module docstring); the reader skips them, so re-import is unchanged.
     """
+    result = result or simulate(graph)
+    cevents = None
+    if counters:
+        cevents = counter_track_events(compute_timelines(
+            graph, result, activation_bytes=activation_bytes,
+            layer_grad_bytes=layer_grad_bytes))
     trace = chrome_trace_dict(events_from_graph(graph, result),
-                              process_name=process_name)
+                              process_name=process_name, counters=cevents)
     if path is not None:
         with open(path, "w") as f:
             json.dump(trace, f)
@@ -340,16 +411,7 @@ def predicted_worker_events(cluster_graph, result
     timestamps with another point's durations.
     """
     res = getattr(result, "global_result", result)
-    for t in cluster_graph.graph.tasks():
-        # (start + duration) - start re-rounds, so compare with a float-
-        # noise tolerance far below any real retune delta
-        tol = 1e-12 * (abs(res.finish[t.uid]) + abs(t.duration)) + 1e-18
-        if abs((res.finish[t.uid] - res.start[t.uid]) - t.duration) > tol:
-            raise ValueError(
-                f"simulation result is stale for task {t.name!r}: the "
-                f"cluster graph was retuned after this result was "
-                f"produced (sweep reuse shares one build) — re-simulate "
-                f"before exporting or diffing")
+    check_result_fresh(cluster_graph.graph, res)
     partition = cluster_graph._worker_partition()
     return [_collapse_worker(cluster_graph, res, i, partition.get(i, []))[0]
             for i in range(len(cluster_graph.workers))]
@@ -455,7 +517,11 @@ def _collapse_worker(cluster_graph, res: SimResult,
 
 
 def export_cluster_traces(cluster_graph, result, out_dir: str, *,
-                          stem: str = "worker") -> List[str]:
+                          stem: str = "worker",
+                          counters: bool = True,
+                          activation_bytes: Optional[Dict[str, float]] = None,
+                          layer_grad_bytes: Optional[Dict[str, float]] = None
+                          ) -> List[str]:
     """Export a simulated cluster as N per-worker Chrome trace files.
 
     ``result`` is the :class:`~repro.core.cluster.ClusterResult` of
@@ -464,12 +530,25 @@ def export_cluster_traces(cluster_graph, result, out_dir: str, *,
     :meth:`ClusterGraph.from_traces` — the round-trip invariant the test
     suite anchors on: a uniform cluster's re-import reproduces the
     predicted makespan.
+
+    ``counters=True`` adds each worker's utilization/queue/comm counter
+    tracks (plus live ``memory_bytes`` when byte maps are passed), computed
+    once on the global graph and sliced per worker; the reader skips them,
+    so the round-trip invariant is untouched.
     """
     os.makedirs(out_dir, exist_ok=True)
+    timelines = None
+    if counters:
+        timelines = compute_timelines(
+            cluster_graph.graph, result, activation_bytes=activation_bytes,
+            layer_grad_bytes=layer_grad_bytes)
     paths: List[str] = []
     for i, events in enumerate(predicted_worker_events(cluster_graph,
                                                        result)):
-        trace = chrome_trace_dict(events, pid=i, process_name=f"worker{i}")
+        cevents = counter_track_events(timelines, worker=i, pid=i) \
+            if timelines is not None else None
+        trace = chrome_trace_dict(events, pid=i, process_name=f"worker{i}",
+                                  counters=cevents)
         path = os.path.join(out_dir, f"{stem}{i}.trace.json")
         with open(path, "w") as f:
             json.dump(trace, f)

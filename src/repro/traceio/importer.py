@@ -33,6 +33,7 @@ from typing import Dict, List, Optional, Sequence, Union
 
 from repro.core.graph import DependencyGraph, GraphError
 from repro.core.task import HOST_THREAD
+from repro.obs.spans import span as _obs_span
 
 from .align import ClockAlignment, align_traces, apply_alignment
 from .chrome import read_chrome
@@ -205,23 +206,31 @@ def load_trace_dir(trace_dir: str, *,
     if not os.path.isdir(trace_dir):
         raise TraceImportError(f"trace dir {trace_dir!r} does not exist")
     from .xla import find_xla_trace_files, load_xla_profile
-    if find_xla_trace_files(trace_dir):
-        return load_xla_profile(trace_dir, infer_gaps=infer_gaps)
-    files = find_worker_files(trace_dir)
-    if not files:
-        raise TraceImportError(
-            f"trace dir {trace_dir!r} has no *.jsonl / *.json worker files")
-    traces = [load_worker_trace(f, i) for i, f in enumerate(files)]
-    if align and len(traces) > 1:
-        alignments = align_traces(traces)
-        _check_alignment_quality(alignments, align == "strict", trace_dir)
-        for tr, al in zip(traces, alignments):
-            apply_alignment(tr, al)
-    else:
-        alignments = [ClockAlignment() for _ in traces]
-    firsts = [tr.first_ts() for tr in traces]
-    t0 = min(firsts, default=0.0)
-    start_skews = [max(0.0, f - t0) for f in firsts]
-    graphs = [graph_from_events(tr, infer_gaps=infer_gaps) for tr in traces]
-    return ImportedCluster(graphs=graphs, traces=traces,
-                           alignments=alignments, start_skews=start_skews)
+    with _obs_span("traceio.load_trace_dir", dir=trace_dir) as sp:
+        if find_xla_trace_files(trace_dir):
+            sp.note(format="xla")
+            return load_xla_profile(trace_dir, infer_gaps=infer_gaps)
+        files = find_worker_files(trace_dir)
+        if not files:
+            raise TraceImportError(
+                f"trace dir {trace_dir!r} has no *.jsonl / *.json worker "
+                f"files")
+        traces = [load_worker_trace(f, i) for i, f in enumerate(files)]
+        if align and len(traces) > 1:
+            alignments = align_traces(traces)
+            _check_alignment_quality(alignments, align == "strict",
+                                     trace_dir)
+            for tr, al in zip(traces, alignments):
+                apply_alignment(tr, al)
+        else:
+            alignments = [ClockAlignment() for _ in traces]
+        firsts = [tr.first_ts() for tr in traces]
+        t0 = min(firsts, default=0.0)
+        start_skews = [max(0.0, f - t0) for f in firsts]
+        graphs = [graph_from_events(tr, infer_gaps=infer_gaps)
+                  for tr in traces]
+        sp.note(format="native", workers=len(graphs),
+                events=sum(len(tr.events) for tr in traces))
+        return ImportedCluster(graphs=graphs, traces=traces,
+                               alignments=alignments,
+                               start_skews=start_skews)
