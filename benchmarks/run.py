@@ -33,6 +33,7 @@ BENCHES = {
     "analysis_diag": "benchmarks.bench_analysis",
     "serving_sim": "benchmarks.bench_serving",
     "obs_telemetry": "benchmarks.bench_obs",
+    "cluster_scale": "benchmarks.bench_scale",
 }
 
 

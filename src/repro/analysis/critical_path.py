@@ -99,6 +99,25 @@ class CriticalPath:
             out[seg.worker] += seg.duration + seg.gap
         return dict(out)
 
+    def per_class(self, classes) -> Dict[Optional[int], float]:
+        """:meth:`per_worker` folded over symmetry classes.
+
+        ``classes`` is the ``WorkerClass`` list of a folded cluster graph
+        (``FoldedClusterGraph.classes``): on a folded graph the worker
+        index of each segment is a *class* index, and this maps it back to
+        the class representative's real worker id — so attributions stay
+        comparable with a materialized run's :meth:`per_worker` without
+        expanding all members.  ``None`` (cluster barriers) passes
+        through.  Expand a class entry to its members on demand via
+        ``classes[i].members``: every member shares the representative's
+        on-path time by symmetry.
+        """
+        out: Dict[Optional[int], float] = collections.defaultdict(float)
+        for ci, secs in self.per_worker().items():
+            out[classes[ci].representative if ci is not None
+                else None] += secs
+        return dict(out)
+
     def targeted_share(self, uids) -> float:
         """Fraction of the makespan spent in segments whose uid is in
         ``uids`` — the critical-path attribution signal opportunity

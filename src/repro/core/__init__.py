@@ -32,12 +32,14 @@ from .task import (Task, TaskKind, HardwareSpec, TPU_V5E, HOST_THREAD,
                    DEVICE_STREAM, DATA_THREAD, DMA_CHANNEL, ici_channel,
                    p2p_channel, worker_thread, split_worker_thread)
 from .graph import DependencyGraph, GraphError
-from .simulate import (simulate, simulate_reference, SimResult,
-                       default_schedule, lane_utilization,
+from .simulate import (simulate, simulate_incremental, simulate_reference,
+                       SimResult, default_schedule, lane_utilization,
                        make_priority_schedule)
 from .cluster import (ClusterGraph, ClusterResult, WorkerSpec,
                       match_collective_gid_groups, match_collective_groups,
                       match_push_pull_groups, match_wired_p2p)
+from .fold import (FoldedClusterGraph, FoldedClusterResult, WorkerClass,
+                   fold_cluster, fold_plan, partition_workers)
 from .transform import (GraphTransform, predicted_speedup, by_kind, by_name,
                         by_layer, by_phase, on_device, all_of, any_of)
 from .costmodel import CostModel, CollectiveModel, MeshTopology
@@ -57,11 +59,13 @@ __all__ = [
     "HOST_THREAD", "DEVICE_STREAM", "DATA_THREAD", "DMA_CHANNEL", "ici_channel",
     "p2p_channel", "worker_thread", "split_worker_thread",
     "DependencyGraph", "GraphError",
-    "simulate", "simulate_reference", "SimResult",
+    "simulate", "simulate_incremental", "simulate_reference", "SimResult",
     "default_schedule", "lane_utilization", "make_priority_schedule",
     "ClusterGraph", "ClusterResult", "WorkerSpec",
     "match_collective_gid_groups", "match_collective_groups",
     "match_push_pull_groups", "match_wired_p2p",
+    "FoldedClusterGraph", "FoldedClusterResult", "WorkerClass",
+    "fold_cluster", "fold_plan", "partition_workers",
     "GraphTransform", "predicted_speedup",
     "by_kind", "by_name", "by_layer", "by_phase", "on_device", "all_of", "any_of",
     "CostModel", "CollectiveModel", "MeshTopology",

@@ -70,6 +70,41 @@ synchronization, then simulate it once.
   (:func:`repro.core.simulate.simulate` — the O(E log V) heap engine makes
   these N-times-larger graphs tractable) and splits the result into a
   :class:`ClusterResult` with a per-worker :class:`SimResult` breakdown.
+
+**Symmetry folding — the equivalence-class contract.**  Replicating every
+worker is O(workers); :mod:`repro.core.fold` instead partitions workers
+into *equivalence classes* and materializes one representative subgraph
+per class, closing the collective structures algebraically over class
+sizes (O(classes) tasks).  Folding is **exact** — bit-identical makespans
+and per-worker timelines — precisely when every worker in a class is
+guaranteed the same timeline as its representative:
+
+* ``"ring"`` collectives fold only for a *fully uniform* group (identical
+  :class:`WorkerSpec` including ``pod``): uniform legs make the
+  cross-worker ring edges tie with each member's own channel
+  serialization, so one representative leg chain reproduces every
+  member's timeline.  A heterogeneous or multi-pod ring has
+  position-dependent leg times (a DCN boundary link is slower), member
+  timelines diverge, and the group *cannot* fold.
+* ``"hierarchical"`` collectives fold per (pod, leader/member role) for
+  any layout whose pods are internally spec-uniform — the pod-uniform
+  case: stage durations depend only on pod membership, and the barrier
+  structure takes maxima that are invariant under collapsing identical
+  members.
+* ``"fused"`` collectives and push/pull pairs fold for any per-spec
+  partition (the barrier max over identical members is the max over
+  representatives) — this is what makes straggler what-ifs cheap: N-1
+  identical workers fold into one class, the straggler is its own class.
+
+Anything that breaks per-class timeline identity — non-uniform specs
+inside a would-be class, multi-pod rings, per-worker traces
+(:meth:`ClusterGraph.from_worker_graphs` never folds), custom wiring the
+fold layer does not recognize — makes :func:`repro.core.fold.fold_cluster`
+return ``None`` and the caller falls back to full materialization, so
+folding is a pure optimization, never a semantics change.  Retunes that
+preserve the partition (same members per class) stay folded; ones that
+split a class (e.g. perturbing one member of a uniform ring) are rejected
+by ``FoldedClusterGraph.can_retune`` and trigger a rebuild.
 """
 
 from __future__ import annotations
@@ -84,7 +119,7 @@ from repro.obs.spans import span as _obs_span
 from .costmodel import CollectiveModel, CostModel
 from .graph import DependencyGraph, GraphError
 from .simulate import (ScheduleFn, SimResult, _host_device_breakdown,
-                       simulate)
+                       simulate, simulate_incremental)
 from .task import (Task, TaskKind, HOST_THREAD, p2p_channel,
                    split_worker_thread, worker_thread)
 
@@ -389,6 +424,11 @@ class ClusterResult:
         dataclasses.field(default=None, repr=False, compare=False)
     _split_fn: Optional[Callable[[], Dict[int, SimResult]]] = \
         dataclasses.field(default=None, repr=False, compare=False)
+    # uid -> (duration, gap) as of this result — lets a chained
+    # simulate_incremental() refresh its own snapshot with just the dirty
+    # deltas instead of an O(V) pass over the graph's tasks
+    _snap: Optional[Dict[int, Tuple[float, float]]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
 
     @property
     def per_worker(self) -> Dict[int, SimResult]:
@@ -427,6 +467,9 @@ class ClusterGraph:
         # collective (attrs["coll_gid"]) — the trace exporter collapses
         # pieces back into one per-worker collective event by this id.
         self._gid = 0
+        # uids whose duration/gap the most recent retune() actually changed
+        # — the dirty set simulate_incremental() replays.
+        self.last_retune_dirty: set = set()
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -1002,46 +1045,80 @@ class ClusterGraph:
                 "instead")
         self.workers = specs
         coll = self.cost.collectives
-        leg_dur: Dict[Tuple, float] = {}   # (ids, pos, payload)
         with _obs_span("cluster.retune", workers=len(specs),
-                       records=len(self._prov)):
-            self._retune_records(specs, coll, leg_dur)
+                       records=len(self._prov)) as sp:
+            self.last_retune_dirty = self._retune_records(specs, coll)
+            sp.note(dirty=len(self.last_retune_dirty))
         return self
 
     def _retune_records(self, specs: Sequence[WorkerSpec],
-                        coll: CollectiveModel,
-                        leg_dur: Dict[Tuple, float]) -> None:
+                        coll: CollectiveModel) -> set:
+        """Recompute every provenance-recorded duration/gap for ``specs``.
+
+        Returns the set of task uids whose duration or gap actually
+        changed — the dirty set :meth:`simulate_incremental` replays.  The
+        CostModel accessors behind the expressions are pure functions of
+        their keys, so each distinct lookup is resolved once per retune
+        (per kind, per (i, j) link pair, per (ids, pos, payload) leg, per
+        pod) instead of once per task — same float expressions as
+        :meth:`build`, just memoized.
+        """
+        kscale: Dict[Any, float] = {}         # TaskKind -> kind_scale
+        link_bw: Dict[Tuple[int, int], float] = {}   # (i, j) -> bandwidth
+        leg_dur: Dict[Tuple, float] = {}      # (ids, pos, payload)
+        pod_scale: Dict[Tuple[int, ...], float] = {}  # pod members -> min bw
+        hop = coll.hop_latency
+        dirty: set = set()
+
+        def bw(i: int, j: int) -> float:
+            b = link_bw.get((i, j))
+            if b is None:
+                b = link_bw[(i, j)] = self._link_bandwidth(i, j)
+            return b
+
         for rec in self._prov:
             kind, t = rec[0], rec[1]
+            gap = t.gap
             if kind == "compute":
-                _, _, i, dur, gap = rec
-                t.duration = dur * specs[i].compute_scale \
-                    * self.cost.kind_scale(t.kind)
-                t.gap = gap * specs[i].compute_scale
+                _, _, i, dur, g0 = rec
+                ks = kscale.get(t.kind)
+                if ks is None:
+                    ks = kscale[t.kind] = self.cost.kind_scale(t.kind)
+                d = dur * specs[i].compute_scale * ks
+                gap = g0 * specs[i].compute_scale
             elif kind == "coll":
                 _, _, i, dur = rec
-                t.duration = dur / max(specs[i].bandwidth_scale, 1e-12)
+                d = dur / max(specs[i].bandwidth_scale, 1e-12)
             elif kind == "ring":
                 _, _, ids, pos, payload = rec
                 key = (ids, pos, payload)
                 d = leg_dur.get(key)
                 if d is None:
-                    d = leg_dur[key] = self._leg_duration(ids, pos, payload)
-                t.duration = d
+                    k = len(ids)
+                    d = leg_dur[key] = \
+                        (payload / k) / bw(ids[pos], ids[(pos + 1) % k]) + hop
             elif kind == "p2p":
                 _, _, i, j, payload = rec
-                t.duration = self._p2p_duration(i, j, payload)
+                d = coll.p2p_time(payload, bw(i, j))
             elif kind in ("hrs", "hag"):
                 _, _, pod_members, payload = rec
                 op = "reduce-scatter" if kind == "hrs" else "all-gather"
-                scale = min(specs[i].bandwidth_scale for i in pod_members)
-                t.duration = coll.axis_time(op, payload, len(pod_members),
-                                            "ici") / max(scale, 1e-12)
+                scale = pod_scale.get(pod_members)
+                if scale is None:
+                    scale = pod_scale[pod_members] = \
+                        min(specs[i].bandwidth_scale for i in pod_members)
+                d = coll.axis_time(op, payload, len(pod_members),
+                                   "ici") / max(scale, 1e-12)
             else:                   # hcross
                 _, _, leader, shard, num_pods = rec
-                t.duration = coll.axis_time("all-reduce", shard, num_pods,
-                                            "dcn") \
+                d = coll.axis_time("all-reduce", shard, num_pods,
+                                   "dcn") \
                     / max(specs[leader].bandwidth_scale, 1e-12)
+            if d != t.duration or gap != t.gap:
+                t.duration = d
+                t.gap = gap
+                dirty.add(t.uid)
+        return dirty
 
     # -------------------------------------------------------------- simulate
     def simulate(self, schedule: Optional[ScheduleFn] = None, *,
@@ -1053,7 +1130,46 @@ class ClusterGraph:
         snap = {t.uid: (t.duration, t.gap) for t in self.graph.tasks()}
         return ClusterResult(makespan=res.makespan, global_result=res,
                              workers=list(self.workers),
-                             _split_fn=lambda: self._split_result(res, snap))
+                             _split_fn=lambda: self._split_result(res, snap),
+                             _snap=snap)
+
+    def simulate_incremental(self, prev: ClusterResult,
+                             dirty: Optional[set] = None,
+                             schedule: Optional[ScheduleFn] = None
+                             ) -> Optional[ClusterResult]:
+        """Replay only the downstream cone of the tasks a retune changed.
+
+        ``prev`` is this graph's :class:`ClusterResult` from *before* the
+        retune; ``dirty`` defaults to :attr:`last_retune_dirty` (the uids
+        whose duration/gap the most recent :meth:`retune` actually
+        changed).  Returns a result bit-identical to :meth:`simulate`, or
+        ``None`` when the cone replay cannot guarantee that (custom
+        schedule, oversized cone, or a boundary reorder hazard — see
+        :func:`repro.core.simulate.simulate_incremental`) and the caller
+        should fall back to a full :meth:`simulate`.
+        """
+        if dirty is None:
+            dirty = self.last_retune_dirty
+        res = simulate_incremental(self.graph, prev.global_result, dirty,
+                                   schedule or self.schedule)
+        if res is None:
+            return None
+        if prev._snap is not None:
+            # the incremental contract says only ``dirty`` changed since
+            # ``prev`` — refresh just those entries
+            snap = dict(prev._snap)
+            by_uid = self.graph._tasks
+            for uid in dirty:
+                t = by_uid.get(uid)
+                if t is not None:     # provenance of detached tasks
+                    snap[uid] = (t.duration, t.gap)
+        else:
+            snap = {t.uid: (t.duration, t.gap)
+                    for t in self.graph.tasks()}
+        return ClusterResult(makespan=res.makespan, global_result=res,
+                             workers=list(self.workers),
+                             _split_fn=lambda: self._split_result(res, snap),
+                             _snap=snap)
 
     def _worker_partition(self) -> Dict[int, List[Task]]:
         """Tasks grouped by worker, cached — the grouping only depends on
@@ -1091,5 +1207,5 @@ class ClusterGraph:
             breakdown = _host_device_breakdown(
                 intervals, makespan, lambda th: th == HOST_THREAD)
             out[i] = SimResult(makespan=makespan, start=start, finish=finish,
-                               thread_busy=dict(busy), breakdown=breakdown)
+                               thread_busy=dict(busy), _breakdown=breakdown)
         return out

@@ -103,6 +103,12 @@ GRAD_CHANNEL = ici_channel("grad")
 # Scenario fields a CLI stack spec / sweep grid may override per point.
 _SCENARIO_OVERRIDES = ("workers", "collective_mode")
 
+# "auto" symmetry folding kicks in at this cluster size: below it the
+# materialized build is already interactive and stays byte-identical with
+# historical behavior; above it O(classes) simulation is what keeps
+# predict/sweep interactive (see repro.core.fold).
+_FOLD_AUTO_MIN_WORKERS = 64
+
 
 class OptimizationError(ValueError):
     """Bad optimization name, parameter, or scenario for the optimization."""
@@ -174,6 +180,11 @@ class Scenario:
     collective_mode: str = "ring"
     trace_dir: Optional[str] = None
     traces: Optional[Any] = None       # repro.traceio.ImportedCluster
+    # symmetry folding (repro.core.fold): True forces it, False disables,
+    # "auto" (default) folds clusters of >= _FOLD_AUTO_MIN_WORKERS workers.
+    # Folding is exact (bit-identical results) and silently falls back to
+    # full materialization when the worker mix cannot fold.
+    fold: Any = "auto"
 
     _baseline: Optional[SimResult] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
@@ -222,6 +233,15 @@ class Scenario:
     def num_workers(self) -> int:
         return self.workers if isinstance(self.workers, int) \
             else len(list(self.workers))
+
+    def _fold_enabled(self, n: Optional[int] = None) -> bool:
+        """Whether to try symmetry folding for an ``n``-worker build."""
+        if self.fold is True:
+            return True
+        if self.fold == "auto":
+            return (self.num_workers if n is None else n) \
+                >= _FOLD_AUTO_MIN_WORKERS
+        return False
 
     # ----------------------------------------------------------- accessors
     @property
@@ -352,9 +372,17 @@ class Scenario:
                                byte_maps=self._byte_maps()), tfs[0], cg)
         tf = opt.apply(self)
         if self.is_cluster:
-            cg = ClusterGraph.build(tf.graph, self.specs, cost=self.cost,
-                                    collective_mode=self.collective_mode,
-                                    schedule=tf.schedule)
+            cg = None
+            if self._fold_enabled():
+                from .fold import fold_cluster
+                cg = fold_cluster(tf.graph, self.specs, cost=self.cost,
+                                  collective_mode=self.collective_mode,
+                                  schedule=tf.schedule)
+            if cg is None:
+                cg = ClusterGraph.build(tf.graph, self.specs,
+                                        cost=self.cost,
+                                        collective_mode=self.collective_mode,
+                                        schedule=tf.schedule)
             cres = cg.simulate()
             return (Prediction(opt, base, cres.makespan, cres.global_result,
                                cres, point or {}, graph=cg.graph,
@@ -421,9 +449,17 @@ class Scenario:
                 post.build(self, stf)
             sched_fn = next((stf.schedule for stf in stfs
                              if stf.schedule is not None), None)
-        cg = plan.place(self._pipeline_specs(plan), cost=self.cost,
-                        collective_mode=self.collective_mode,
-                        sched_fn=sched_fn, templates=templates)
+        pspecs = self._pipeline_specs(plan)
+        cg = None
+        if self._fold_enabled(plan.num_workers):
+            from .fold import fold_plan
+            cg = fold_plan(plan, pspecs, cost=self.cost,
+                           collective_mode=self.collective_mode,
+                           sched_fn=sched_fn, templates=templates)
+        if cg is None:
+            cg = plan.place(pspecs, cost=self.cost,
+                            collective_mode=self.collective_mode,
+                            sched_fn=sched_fn, templates=templates)
         cres = cg.simulate()
         out_tf = tf if tf is not None \
             else GraphTransform(templates[0], copy=False)
@@ -469,7 +505,10 @@ class Scenario:
         of rebuilding from scratch: on the cluster route, points that only
         change worker specs (bandwidth scales, straggler slowdowns) retune
         one :class:`ClusterGraph` build in place
-        (:meth:`ClusterGraph.retune` — exact, not approximate); on the
+        (:meth:`ClusterGraph.retune` — exact, not approximate) and replay
+        only the dirty downstream cone of the retuned tasks
+        (:func:`simulate_incremental`, falling back to a full event replay
+        when the cone grows too large); on the
         single-graph route, optimizations that support cheap
         re-parameterization (:meth:`Optimization.retune`) rescale the
         applied transform.  Structural changes (bucket sizes, worker
@@ -481,7 +520,7 @@ class Scenario:
         base = self.baseline().makespan
         preds: List[Prediction] = []
         cache: Dict[str, Any] = {"opt": None, "scn": None, "tf": None,
-                                 "cg": None}
+                                 "cg": None, "cres": None}
         for i, pt in enumerate(points):
             opt_params = {k: v for k, v in pt.items() if k in opt_names}
             over = {k: v for k, v in pt.items()
@@ -500,15 +539,25 @@ class Scenario:
                 pred = None
                 if reuse and cache["cg"] is not None \
                         and self._cluster_reusable(popt, scn, cache):
-                    sp.note(route="cluster_retune")
-                    cache["cg"].retune(scn.specs)
-                    cres = cache["cg"].simulate()
+                    cg = cache["cg"]
+                    cg.retune(scn.specs)
+                    cres = None
+                    if cache["cres"] is not None:
+                        cres = cg.simulate_incremental(cache["cres"])
+                    if cres is not None:
+                        sp.note(route="cluster_retune", sim="incremental",
+                                dirty=len(cg.last_retune_dirty))
+                    else:
+                        cres = cg.simulate()
+                        sp.note(route="cluster_retune", sim="full",
+                                dirty=len(cg.last_retune_dirty))
                     pred = Prediction(popt, base, cres.makespan,
                                       cres.global_result, cres, dict(pt),
-                                      graph=cache["cg"].graph,
-                                      schedule=cache["cg"].schedule,
+                                      graph=cg.graph,
+                                      schedule=cg.schedule,
                                       byte_maps=scn._byte_maps())
                     cache["opt"], cache["scn"] = popt, scn
+                    cache["cres"] = cres
                 elif reuse and cache["tf"] is not None and not over \
                         and scn is self and not scn.is_cluster \
                         and type(popt) is type(cache["opt"]) \
@@ -521,12 +570,15 @@ class Scenario:
                                       byte_maps=scn._byte_maps())
                     cache["opt"] = popt
                 if pred is None:
-                    sp.note(route="rebuild")
+                    sp.note(route="rebuild",
+                            reason=self._rebuild_reason(popt, scn, cache,
+                                                        over, reuse))
                     pred, tf, cg = scn._evaluate(popt, baseline=base,
                                                  point=dict(pt),
                                                  reuse=reuse)
                     if reuse:
-                        cache.update(opt=popt, scn=scn, tf=tf, cg=cg)
+                        cache.update(opt=popt, scn=scn, tf=tf, cg=cg,
+                                     cres=pred.cluster)
             preds.append(pred)
         return preds
 
@@ -543,6 +595,45 @@ class Scenario:
                 and scn.activation_bytes is prev.activation_bytes
                 and scn.collective_mode == prev.collective_mode
                 and cache["cg"].can_retune(scn.specs))
+
+    def _rebuild_reason(self, popt: "Optimization", scn: "Scenario",
+                        cache: Dict[str, Any], over: Dict[str, Any],
+                        reuse: bool) -> str:
+        """Name why a sweep point fell back to a full rebuild.
+
+        Mirrors the reuse predicates in :meth:`sweep` /
+        :meth:`_cluster_reusable`, reporting the *first* failed condition
+        so scale regressions show up in telemetry with a cause attached.
+        """
+        if not reuse:
+            return "reuse_disabled"
+        if cache["opt"] is None:
+            return "first_point"
+        prev = cache["scn"]
+        if scn.is_cluster:
+            if cache["cg"] is None:
+                return "no_cached_cluster"
+            if popt != cache["opt"]:
+                return "opt_params_changed"
+            if prev is None or scn.graph is not prev.graph \
+                    or scn.traces is not prev.traces:
+                return "graph_changed"
+            if scn.cost is not prev.cost \
+                    or scn.layer_grad_bytes is not prev.layer_grad_bytes \
+                    or scn.activation_bytes is not prev.activation_bytes:
+                return "cost_or_bytes_changed"
+            if scn.collective_mode != prev.collective_mode:
+                return "collective_mode_changed"
+            if len(scn.specs) != len(getattr(prev, "specs", ())):
+                return "worker_count_changed"
+            return "retune_rejected"
+        if over:
+            return "scenario_override"
+        if cache["tf"] is None:
+            return "no_cached_transform"
+        if type(popt) is not type(cache["opt"]):
+            return "opt_type_changed"
+        return "retune_unsupported"
 
 
 # ============================================================== prediction

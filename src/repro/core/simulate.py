@@ -82,11 +82,52 @@ class SimResult:
     start: Dict[int, float]                  # uid -> start time (paper output)
     finish: Dict[int, float]                 # uid -> start + duration (no gap)
     thread_busy: Dict[str, float]            # per-thread busy seconds
-    breakdown: Dict[str, float]              # paper Fig.6: host-only / device-only / parallel
+    _breakdown: Optional[Dict[str, float]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
+    _breakdown_fn: Optional[Callable[[], Dict[str, float]]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
     _binding: Optional[Dict[int, Optional[int]]] = \
         dataclasses.field(default=None, repr=False, compare=False)
     _binding_fn: Optional[Callable[[], Dict[int, Optional[int]]]] = \
         dataclasses.field(default=None, repr=False, compare=False)
+    # incremental-replay carry: per-thread busy intervals, per-thread final
+    # completion (finish + gap of the lane's last task), and per-thread uid
+    # execution order.  simulate_incremental() reads them off ``prev`` to
+    # freeze clean lanes in O(threads) instead of re-deriving them in O(V),
+    # and writes them on its merged result so sweep chains stay cheap.
+    _intervals: Optional[Dict[str, List[Tuple[float, float]]]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
+    _lane_done: Optional[Dict[str, float]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
+    _lanes: Optional[Dict[str, List[int]]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
+    _lanes_fn: Optional[Callable[[], Dict[str, List[int]]]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
+
+    @property
+    def breakdown(self) -> Dict[str, float]:
+        """Paper Fig. 6 runtime breakdown: host-only / device-only /
+        parallel / idle seconds.
+
+        Materialized lazily on first access (the :attr:`binding` pattern):
+        the interval unions behind it are O(V log V) and most sweep points
+        never read them — deferring keeps both the engine and the
+        incremental replay path free of the cost.
+        """
+        if self._breakdown is None and self._breakdown_fn is not None:
+            self._breakdown = self._breakdown_fn()
+            self._breakdown_fn = None    # drop: pins the interval lists
+        return self._breakdown or {}
+
+    @property
+    def lane_order(self) -> Optional[Dict[str, List[int]]]:
+        """Per-thread uids in execution order, or ``None`` when this
+        result cannot provide them (hand-built instances).  Derived
+        lazily from the engine's pop order and cached."""
+        if self._lanes is None and self._lanes_fn is not None:
+            self._lanes = self._lanes_fn()
+            self._lanes_fn = None
+        return self._lanes
 
     @property
     def binding(self) -> Optional[Dict[int, Optional[int]]]:
@@ -151,11 +192,25 @@ def _assemble(graph: DependencyGraph, executed: int,
         raise RuntimeError(
             f"simulation deadlock: executed {executed}/{len(graph)} tasks (cycle?)")
     makespan = max(progress.values(), default=0.0)
-    breakdown = _host_device_breakdown(busy_intervals, makespan,
-                                       lambda th: th == HOST_THREAD)
+    ivs = dict(busy_intervals)
+    lane_done = dict(progress)
+    by_uid = graph._tasks
+
+    def lanes_fn() -> Dict[str, List[int]]:
+        # ``start`` insertion order is the engine's pop order, so one
+        # grouping pass recovers each lane's execution order
+        lanes: Dict[str, List[int]] = {th: [] for th in lane_done}
+        for uid in start:
+            lanes[by_uid[uid].thread].append(uid)
+        return lanes
+
     return SimResult(makespan=makespan, start=start, finish=finish,
-                     thread_busy=dict(busy), breakdown=breakdown,
-                     _binding_fn=binding_fn)
+                     thread_busy=dict(busy),
+                     _breakdown_fn=lambda: _host_device_breakdown(
+                         ivs, makespan, lambda th: th == HOST_THREAD),
+                     _binding_fn=binding_fn,
+                     _intervals=ivs, _lane_done=lane_done,
+                     _lanes_fn=lanes_fn)
 
 
 def _derive_binding(by_uid: Dict[int, Task], start: Dict[int, float],
@@ -324,6 +379,271 @@ def simulate(graph: DependencyGraph, schedule: Optional[ScheduleFn] = None,
         if record_binding else None
     return _assemble(graph, executed, progress, start, finish, busy,
                      busy_intervals, binding_fn)
+
+
+def simulate_incremental(graph: DependencyGraph, prev: SimResult,
+                         dirty, schedule: Optional[ScheduleFn] = None,
+                         *, max_cone_frac: float = 0.75
+                         ) -> Optional[SimResult]:
+    """Re-simulate only the downstream *cone* of ``dirty`` tasks.
+
+    ``prev`` is the result of simulating ``graph`` before the durations/gaps
+    of the ``dirty`` task uids were changed in place (a
+    :meth:`~repro.core.cluster.ClusterGraph.retune` records exactly that
+    set).  Everything outside the cone — the dependency-closure of ``dirty``
+    unioned with each affected lane's execution-order suffix — kept its
+    start/finish times, so only the cone is replayed through the heap
+    engine, seeded with the frozen boundary: per-lane progress resumes from
+    the last clean task and ready times come from clean parents' previous
+    completion times.  On sweeps that touch a small fraction of the graph
+    this is the difference between O(cone) and O(E log V) per point.
+
+    Returns a :class:`SimResult` **bit-identical** to a full
+    :func:`simulate` replay, or ``None`` when incremental replay cannot
+    guarantee that and the caller must fall back to :func:`simulate`:
+
+    * a custom ``schedule`` is supplied (its SCHED_EPS tie window may
+      reorder tasks across the frozen boundary),
+    * ``prev`` does not cover this graph's task set,
+    * the cone exceeds ``max_cone_frac`` of the graph (replay would not
+      pay for the merge),
+    * a cone task's new ready time falls *before* its previous start AND
+      at-or-before the last frozen task's start on its lane — the re-tune
+      could legally reorder that lane, so the frozen prefix is no longer
+      trustworthy.  (Either condition alone keeps the previous order
+      under the default policy: a ready time ``>=`` the previous start
+      means the heap key ``(eff, ready, uid)`` only ever grew, and a
+      ready time strictly after every prefix start means the prefix pops
+      first regardless — heap pop times are nondecreasing.)
+
+    An empty ``dirty`` set returns ``prev`` unchanged.
+    """
+    if schedule is not None:
+        return None
+    by_uid = graph._tasks
+    dirty = {u for u in dirty if u in by_uid}
+    if not dirty:
+        return prev
+    start_prev, finish_prev = prev.start, prev.finish
+    if len(start_prev) != len(by_uid) or \
+            any(u not in start_prev for u in dirty):
+        return None
+
+    # per-lane execution order: results straight off the engine (and
+    # merged incremental results, which maintain the carry) expose it as
+    # ``prev.lane_order`` — position indices are then built only for the
+    # lanes the cone actually reaches.  Hand-built results fall back to a
+    # one-pass membership scan; a scanned lane whose recorded order is
+    # non-monotone in start (cone entries of an in-place-merged dict keep
+    # stale insertion positions) is re-sorted by (start, uid) — starts are
+    # monotone per lane and same-instant ties are zero-duration runs where
+    # any order is equivalent
+    prev_lanes = prev.lane_order
+    members: Optional[Dict[str, List[int]]] = None
+    if prev_lanes is None:
+        members = collections.defaultdict(list)
+        for uid in start_prev:
+            members[by_uid[uid].thread].append(uid)
+    lanes: Dict[str, List[int]] = {}
+    pos: Dict[int, int] = {}
+
+    def lane_of(th: str) -> List[int]:
+        lane = lanes.get(th)
+        if lane is None:
+            if prev_lanes is not None:
+                lane = prev_lanes[th]
+            else:
+                lane = members[th]
+                last = float("-inf")
+                for u in lane:
+                    s = start_prev[u]
+                    if s < last:
+                        lane = sorted(lane,
+                                      key=lambda u: (start_prev[u], u))
+                        break
+                    last = s
+            lanes[th] = lane
+            for i, u in enumerate(lane):
+                pos[u] = i
+        return lane
+
+    # cone closure: dependency children + lane successors
+    children_of = graph._children
+    parents_of = graph._parents
+    cone = set()
+    stack = list(dirty)
+    while stack:
+        u = stack.pop()
+        if u in cone:
+            continue
+        cone.add(u)
+        lane = lane_of(by_uid[u].thread)
+        i = pos[u]
+        if i + 1 < len(lane) and lane[i + 1] not in cone:
+            stack.append(lane[i + 1])
+        for c in children_of.get(u, ()):
+            if c not in cone:
+                stack.append(c)
+    if len(cone) > max_cone_frac * len(by_uid):
+        return None
+
+    # frozen boundary per affected lane: progress resumes from the last
+    # clean task (the cone's lane slice is an execution-order suffix)
+    first_cone: Dict[str, int] = {}
+    for u in cone:
+        th = by_uid[u].thread
+        i = pos[u]
+        if i < first_cone.get(th, len(lanes[th])):
+            first_cone[th] = i
+    # lane completion is not monotone under the (start, uid) sort inside a
+    # zero-duration same-instant tie run, so boundaries are maxes, not
+    # last-element reads
+    progress: Dict[str, float] = {}
+    bound_start: Dict[str, float] = {}
+    for th, i in first_cone.items():
+        p = 0.0
+        if i > 0:
+            lane = lanes[th]
+            bs = start_prev[lane[i - 1]]    # latest frozen-prefix start
+            bound_start[th] = bs
+            # completion (finish + gap) is nondecreasing along execution
+            # order except inside a same-instant tie run, and every task
+            # before the trailing tie run completed at or before ``bs``
+            # (itself <= any tie-run completion) — so the boundary max
+            # only needs the tie run, not the whole prefix
+            j = i - 1
+            while j >= 0 and start_prev[lane[j]] == bs:
+                u = lane[j]
+                d = finish_prev[u] + by_uid[u].gap
+                if d > p:
+                    p = d
+                j -= 1
+        progress[th] = p
+
+    # seed ready times from clean parents' previous completions; replay
+    # releases propagate the in-cone ones
+    earliest: Dict[int, float] = {}
+    ref: Dict[int, int] = {}
+    heap: List[Tuple[float, float, int]] = []
+    for u in cone:
+        e = 0.0
+        r = 0
+        for pu in parents_of.get(u, ()):
+            if pu in cone:
+                r += 1
+            else:
+                d = finish_prev[pu] + by_uid[pu].gap
+                if d > e:
+                    e = d
+            # a clean task's children are all clean by closure, so every
+            # parent of a cone task is either in the cone or frozen
+        earliest[u] = e
+        ref[u] = r
+        if r == 0:
+            p = progress[by_uid[u].thread]
+            heap.append((p if p > e else e, e, u))
+    heapq.heapify(heap)
+
+    start = dict(start_prev)
+    finish = dict(finish_prev)
+    exec_seq: Dict[str, List[int]] = {th: [] for th in first_cone}
+    executed = 0
+    heappush, heappop = heapq.heappush, heapq.heappop
+    while heap:
+        eff_key, _, uid = heappop(heap)
+        u = by_uid[uid]
+        th = u.thread
+        e = earliest[uid]
+        p = progress[th]
+        eff = p if p > e else e
+        if eff > eff_key:                     # stale lower bound: re-key
+            heappush(heap, (eff, e, uid))
+            continue
+        if first_cone[th] > 0 and e < start_prev[uid] \
+                and e <= bound_start[th]:
+            # this task became ready before its old start AND at-or-before
+            # the last frozen-prefix start on its lane: a full replay
+            # could slot it ahead of the frozen prefix — bail out.  Either
+            # disjunct alone is safe: e >= old start keeps the previous
+            # heap order (the (eff, ready, uid) key only grew), and
+            # e > every prefix start means the prefix pops first anyway
+            # (pop times are nondecreasing)
+            return None
+        start[uid] = eff
+        end = eff + u.duration
+        finish[uid] = end
+        done = end + u.gap
+        progress[th] = done
+        exec_seq[th].append(uid)
+        executed += 1
+        for cuid in children_of.get(uid, ()):
+            r = ref[cuid] - 1
+            ref[cuid] = r
+            if earliest[cuid] < done:
+                earliest[cuid] = done
+            if r == 0:
+                ec = earliest[cuid]
+                pc = progress[by_uid[cuid].thread]
+                heappush(heap, (pc if pc > ec else ec, ec, cuid))
+    if executed != len(cone):
+        raise RuntimeError(
+            f"incremental simulation deadlock: executed {executed}/"
+            f"{len(cone)} cone task(s) (cycle?)")
+
+    # merge: clean lanes keep their previous totals verbatim; affected
+    # lanes re-fold busy/intervals in execution order (frozen prefix, then
+    # replay order) so the sums are bit-identical to a full replay.  With
+    # the ``prev`` carry (intervals / lane finals / lane order) the clean
+    # side is O(threads) dict copies sharing prev's per-lane lists;
+    # without it, a one-pass fallback over the membership scan.
+    fast = (prev_lanes is not None and prev._intervals is not None
+            and prev._lane_done is not None)
+    if fast:
+        busy = dict(prev.thread_busy)
+        busy_intervals = dict(prev._intervals)
+        lane_done = dict(prev._lane_done)
+        res_lanes: Optional[Dict[str, List[int]]] = dict(prev_lanes)
+    else:
+        busy = {}
+        busy_intervals = {}
+        lane_done = {}
+        res_lanes = None
+    for th in first_cone:
+        order = lanes[th][:first_cone[th]] + exec_seq[th]
+        acc = 0.0
+        ivs: List[Tuple[float, float]] = []
+        for u in order:
+            d = by_uid[u].duration
+            acc += d
+            if d > 0:
+                ivs.append((start[u], finish[u]))
+        busy[th] = acc
+        busy_intervals[th] = ivs
+        lane_done[th] = progress[th]
+        if res_lanes is not None:
+            res_lanes[th] = order
+    if not fast:
+        if members is None:
+            members = collections.defaultdict(list)
+            for uid in start_prev:
+                members[by_uid[uid].thread].append(uid)
+        for th, mem in members.items():
+            if th in first_cone:
+                continue
+            busy[th] = prev.thread_busy.get(th, 0.0)
+            lane_done[th] = max(finish_prev[u] + by_uid[u].gap
+                                for u in mem)
+            # membership order is fine: _host_device_breakdown re-sorts
+            busy_intervals[th] = [(start_prev[u], finish_prev[u])
+                                  for u in mem if by_uid[u].duration > 0]
+    makespan = max(lane_done.values(), default=0.0)
+    return SimResult(makespan=makespan, start=start, finish=finish,
+                     thread_busy=busy,
+                     _breakdown_fn=lambda: _host_device_breakdown(
+                         busy_intervals, makespan,
+                         lambda th: th == HOST_THREAD),
+                     _intervals=busy_intervals, _lane_done=lane_done,
+                     _lanes=res_lanes)
 
 
 def simulate_reference(graph: DependencyGraph,

@@ -424,3 +424,23 @@ class ParallelPlan:
                     "all-reduce", [remaps[w][ars[s].uid] for w in ids],
                     worker_ids=ids)
         return cg._finish()
+
+    def fold_place(self, workers: Optional[Union[int, Sequence[WorkerSpec]]]
+                   = None, *, cost: Optional[CostModel] = None,
+                   collective_mode: str = "ring",
+                   sched_fn: Optional[ScheduleFn] = None,
+                   templates: Optional[Sequence[DependencyGraph]] = None):
+        """Symmetry-folded :meth:`place`: one representative per stage.
+
+        When every replica of a stage shares an identical
+        :class:`WorkerSpec`, the ``dp`` data-parallel replicas are
+        equivalence classes — folding materializes ``stages`` workers
+        instead of ``stages * dp`` and closes the gradient rings
+        algebraically over the class size.  Returns ``None`` whenever the
+        exactness contract does not hold (``dp < 2``, hierarchical mode,
+        non-uniform stage replicas); callers fall back to :meth:`place`.
+        """
+        from repro.core.fold import fold_plan
+        return fold_plan(self, workers, cost=cost,
+                         collective_mode=collective_mode,
+                         sched_fn=sched_fn, templates=templates)

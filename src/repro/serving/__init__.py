@@ -32,7 +32,7 @@ from .workload import (RequestSpec, Workload, explicit_workload,
                        poisson_workload, scale_arrivals, trace_workload)
 from .costs import ServingCostModel
 from .graphgen import (ServingGraph, ServingPolicy, build_serving_graph,
-                       slot_lane, ARRIVAL_LANE, COLL_LANE, DMA_LANE,
+                       slot_lane, slot_lane_classes, ARRIVAL_LANE, COLL_LANE, DMA_LANE,
                        SCHED_LANE)
 from .scenario import (ChunkedPrefill, ContinuousBatching, KVOffload,
                        ServingOptimization, ServingPrediction,
@@ -44,6 +44,7 @@ __all__ = [
     "explicit_workload", "scale_arrivals",
     "ServingCostModel",
     "ServingGraph", "ServingPolicy", "build_serving_graph", "slot_lane",
+    "slot_lane_classes",
     "ARRIVAL_LANE", "SCHED_LANE", "COLL_LANE", "DMA_LANE",
     "ServingOptimization", "ContinuousBatching", "StaticSlots",
     "ChunkedPrefill", "TensorParallelServing", "KVOffload",

@@ -72,6 +72,32 @@ def slot_lane(k: int) -> str:
     return f"slot:{k}"
 
 
+def slot_lane_classes(result, *, prefix: str = "") -> List[Tuple[int, ...]]:
+    """Partition ``slot:<k>`` lanes into symmetry classes.
+
+    Batch-slot lanes are interchangeable by construction — the engine
+    admits requests into whichever slot is free — so lanes whose
+    simulated busy time is exactly equal form one equivalence class.
+    Returns slot-index tuples (each ascending, ordered by busy time),
+    mirroring the cluster layer's worker classes: at 10k scale, report
+    one representative lane per class instead of every lane.  Pass
+    ``prefix="w0/"`` to scope to one worker of a namespaced cluster
+    graph.
+    """
+    want = prefix + "slot:"
+    groups: Dict[float, List[int]] = {}
+    for th, busy in result.thread_busy.items():
+        if not th.startswith(want):
+            continue
+        try:
+            k = int(th[len(want):])
+        except ValueError:
+            continue
+        groups.setdefault(busy, []).append(k)
+    return [tuple(sorted(members))
+            for _, members in sorted(groups.items())]
+
+
 @dataclasses.dataclass(frozen=True)
 class ServingPolicy:
     """How the engine batches requests — the knob surface the registered

@@ -47,7 +47,8 @@ from repro.core.simulate import SimResult, lane_utilization, simulate
 from repro.core.task import Task
 from repro.core.transform import GraphTransform
 from .costs import ServingCostModel
-from .graphgen import ServingGraph, ServingPolicy, build_serving_graph
+from .graphgen import (ServingGraph, ServingPolicy, build_serving_graph,
+                       slot_lane_classes)
 from .workload import Workload
 
 # attrs["serving"] values of engine work (everything but the arrival
@@ -209,6 +210,9 @@ class ServingPrediction(Prediction):
     tokens_generated: int = 0
     requests_completed: int = 0
     lane_util: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # folded slot-lane view: "slot:<rep> x<count>" -> utilization, one
+    # entry per symmetry class (see graphgen.slot_lane_classes)
+    slot_classes: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def __repr__(self) -> str:
         return (f"ServingPrediction({self.optimization.spec()}: "
@@ -272,6 +276,11 @@ def serving_metrics(graph: DependencyGraph, result: SimResult,
     if prefix:
         util = {th[len(prefix):]: u for th, u in util.items()
                 if th.startswith(prefix)}
+    slot_classes = {
+        f"slot:{members[0]}" + (f" x{len(members)}"
+                                if len(members) > 1 else ""):
+        util.get(f"slot:{members[0]}", 0.0)
+        for members in slot_lane_classes(result, prefix=prefix)}
     return {
         "ttft_p50": _pct(ttft, 0.50), "ttft_p99": _pct(ttft, 0.99),
         "tpot_p50": _pct(tpot, 0.50), "tpot_p99": _pct(tpot, 0.99),
@@ -281,6 +290,7 @@ def serving_metrics(graph: DependencyGraph, result: SimResult,
         "tokens_generated": total,
         "requests_completed": completed,
         "lane_util": util,
+        "slot_classes": slot_classes,
     }
 
 

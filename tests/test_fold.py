@@ -1,0 +1,317 @@
+"""Symmetry folding (repro.core.fold) + incremental cone re-simulation.
+
+The exactness contract under test: a folded cluster graph — one
+representative worker per equivalence class, collectives closed
+algebraically over class sizes — produces the *same* timeline as the fully
+materialized :class:`ClusterGraph` (makespan bit-exact, per-class results
+equal to every member's per-worker rollup).  Folding must refuse (return
+``None``) whenever the contract cannot hold, and
+:func:`simulate_incremental` must reproduce a full replay exactly or bail
+to ``None`` — never silently drift.  Randomized-seed deterministic tests
+live here; hypothesis properties in ``test_fold_properties.py``.
+"""
+
+import random
+
+import pytest
+
+from repro.core import (ClusterGraph, GraphError, WorkerSpec, fold_cluster,
+                        fold_plan, partition_workers, simulate,
+                        simulate_incremental)
+from repro.core.fold import FoldedClusterGraph, WorkerClass
+from repro.core.optimize import Scenario, straggler_specs
+from repro.parallel.plan import ParallelPlan, StageProfile
+from synthgraphs import training_step_graph
+
+LAYERS = 5
+GRADS = {f"l{i}": 30e6 for i in range(LAYERS)}
+
+
+@pytest.fixture()
+def graph():
+    return training_step_graph(layers=LAYERS)
+
+
+def balanced_plan(S, M, dp, *, act=4e6, grad=8e6):
+    profs = tuple(StageProfile(index=s, layers=(f"l{s}",), fwd_s=2e-3,
+                               bwd_s=4e-3, update_s=1e-3, act_bytes=act,
+                               grad_bytes=grad) for s in range(S))
+    return ParallelPlan(profs, M, "gpipe", dp)
+
+
+def assert_fold_equiv(fg, cg, *, tol=0.0):
+    """Folded == materialized: makespan and every member's rollup."""
+    rf, rm = fg.simulate(), cg.simulate()
+    if tol:
+        assert rf.makespan == pytest.approx(rm.makespan, abs=tol)
+    else:
+        assert rf.makespan == rm.makespan
+    pw_f, pw_m = rf.per_worker, rm.per_worker
+    assert set(pw_f) == set(pw_m)
+    for w in pw_m:
+        assert pw_f[w].makespan == pytest.approx(pw_m[w].makespan,
+                                                 abs=1e-9)
+        for k, v in pw_m[w].breakdown.items():
+            assert pw_f[w].breakdown.get(k, 0.0) == pytest.approx(
+                v, abs=1e-9)
+    return rf, rm
+
+
+class TestPartition:
+    def test_ring_uniform_single_class(self):
+        classes = partition_workers([WorkerSpec()] * 6, "ring")
+        assert [c.members for c in classes] == [(0, 1, 2, 3, 4, 5)]
+        assert classes[0].representative == 0 and classes[0].count == 6
+
+    def test_ring_nonuniform_refuses(self):
+        specs = [WorkerSpec()] * 5 + [WorkerSpec(compute_scale=2.0)]
+        assert partition_workers(specs, "ring") is None
+
+    def test_fused_groups_by_spec(self):
+        specs = [WorkerSpec(), WorkerSpec(compute_scale=2.0),
+                 WorkerSpec(), WorkerSpec(compute_scale=2.0)]
+        classes = partition_workers(specs, "fused")
+        assert sorted(c.members for c in classes) == [(0, 2), (1, 3)]
+
+    def test_hierarchical_leader_and_members_per_pod(self):
+        specs = [WorkerSpec(pod=i // 3) for i in range(6)]
+        classes = partition_workers(specs, "hierarchical")
+        got = sorted((c.role, c.members) for c in classes)
+        assert got == [("leader", (0,)), ("leader", (3,)),
+                       ("member", (1, 2)), ("member", (4, 5))]
+
+    def test_hierarchical_mixed_pod_refuses(self):
+        specs = [WorkerSpec(pod=0), WorkerSpec(pod=0,
+                                               bandwidth_scale=0.5),
+                 WorkerSpec(pod=1), WorkerSpec(pod=1)]
+        assert partition_workers(specs, "hierarchical") is None
+
+    def test_unknown_mode_raises(self):
+        with pytest.raises(GraphError):
+            partition_workers([WorkerSpec()], "warp")
+
+
+class TestFoldCluster:
+    @pytest.mark.parametrize("mode", ["ring", "fused", "hierarchical"])
+    def test_uniform_bit_exact(self, graph, mode):
+        specs = [WorkerSpec() for _ in range(8)]
+        fg = fold_cluster(graph, specs, collective_mode=mode)
+        assert isinstance(fg, FoldedClusterGraph)
+        assert fg.num_classes < len(specs)
+        cg = ClusterGraph.build(graph, specs, collective_mode=mode)
+        assert_fold_equiv(fg, cg)
+
+    def test_pod_uniform_hierarchical_bit_exact(self, graph):
+        specs = [WorkerSpec(pod=i // 4,
+                            bandwidth_scale=1.0 + 0.25 * (i // 4))
+                 for i in range(12)]
+        fg = fold_cluster(graph, specs, collective_mode="hierarchical")
+        cg = ClusterGraph.build(graph, specs,
+                                collective_mode="hierarchical")
+        assert fg.num_classes == 6      # (leader, member) x 3 pods
+        assert_fold_equiv(fg, cg)
+
+    def test_straggler_folds_rest_into_one_class(self, graph):
+        specs = straggler_specs(16, [2.5])[0]
+        fg = fold_cluster(graph, specs, collective_mode="fused")
+        cg = ClusterGraph.build(graph, specs, collective_mode="fused")
+        assert fg.num_classes == 2
+        assert_fold_equiv(fg, cg)
+
+    def test_no_gain_returns_none(self, graph):
+        """All-distinct specs: classes == workers, fold refuses."""
+        specs = [WorkerSpec(compute_scale=1.0 + 0.1 * i) for i in range(4)]
+        assert fold_cluster(graph, specs,
+                            collective_mode="fused") is None
+        assert fold_cluster(graph, specs, collective_mode="ring") is None
+
+    def test_per_class_rollup(self, graph):
+        specs = [WorkerSpec() for _ in range(6)]
+        fg = fold_cluster(graph, specs, collective_mode="ring")
+        res = fg.simulate()
+        (cls,) = fg.classes
+        (pc,) = res.per_class.values()
+        for w in cls.members:
+            assert res.per_worker[w].makespan == pc.makespan
+
+
+class TestFoldPlan:
+    def test_hybrid_pp_dp_bit_exact(self):
+        p = balanced_plan(4, 8, dp=4)
+        fg = p.fold_place()
+        cg = p.place()
+        assert fg is not None and fg.num_classes == 4
+        assert_fold_equiv(fg, cg)
+
+    def test_stage_heterogeneous_but_uniform_within(self):
+        p = balanced_plan(3, 6, dp=8)
+        specs = [WorkerSpec(compute_scale=1.0 + 0.1 * (w // 8))
+                 for w in range(p.num_workers)]
+        fg = p.fold_place(specs)
+        cg = p.place(specs)
+        assert fg is not None
+        assert_fold_equiv(fg, cg)
+
+    def test_refusals(self):
+        # dp=1: no replica symmetry to fold
+        assert balanced_plan(4, 8, dp=1).fold_place() is None
+        # hierarchical stage rings are not foldable
+        assert balanced_plan(2, 4, dp=4).fold_place(
+            collective_mode="hierarchical") is None
+        # a straggler inside one stage breaks within-stage uniformity
+        p = balanced_plan(2, 4, dp=4)
+        specs = [WorkerSpec() for _ in range(p.num_workers)]
+        specs[1] = WorkerSpec(compute_scale=3.0)
+        assert p.fold_place(specs) is None
+
+
+class TestFoldRetune:
+    def test_retune_matches_rebuild(self, graph):
+        specs = [WorkerSpec() for _ in range(8)]
+        fg = fold_cluster(graph, specs, collective_mode="ring")
+        new = [WorkerSpec(bandwidth_scale=1.7)] * 8
+        assert fg.can_retune(new)
+        fg.retune(new)
+        cg = ClusterGraph.build(graph, new, collective_mode="ring")
+        assert_fold_equiv(fg, cg)
+
+    def test_partition_change_rejected(self, graph):
+        specs = [WorkerSpec() for _ in range(8)]
+        fg = fold_cluster(graph, specs, collective_mode="ring")
+        broken = [WorkerSpec()] * 7 + [WorkerSpec(compute_scale=2.0)]
+        assert not fg.can_retune(broken)
+        with pytest.raises(GraphError):
+            fg.retune(broken)
+
+    def test_fused_straggler_retunes_within_partition(self, graph):
+        specs = [WorkerSpec()] * 7 + [WorkerSpec(compute_scale=2.0)]
+        fg = fold_cluster(graph, specs, collective_mode="fused")
+        new = [WorkerSpec()] * 7 + [WorkerSpec(compute_scale=3.5)]
+        assert fg.can_retune(new)
+        fg.retune(new)
+        cg = ClusterGraph.build(graph, new, collective_mode="fused")
+        assert_fold_equiv(fg, cg)
+
+
+class TestIncremental:
+    def _assert_same(self, inc, full):
+        assert inc.makespan == full.makespan
+        assert inc.start == full.start
+        assert inc.finish == full.finish
+        assert inc.thread_busy == full.thread_busy
+
+    def test_empty_dirty_returns_prev(self, graph):
+        prev = simulate(graph)
+        assert simulate_incremental(graph, prev, set()) is prev
+
+    def test_stale_prev_bails(self, graph):
+        cg = ClusterGraph.build(graph, 4)
+        prev = cg.simulate()
+        cg2 = ClusterGraph.build(graph, 3)
+        dirty = {next(iter(cg2.graph._tasks))}
+        assert simulate_incremental(cg2.graph, prev.global_result,
+                                    dirty) is None
+
+    @pytest.mark.parametrize("mode", ["ring", "fused", "hierarchical"])
+    def test_random_retunes_match_full(self, graph, mode):
+        rng = random.Random(hash(mode) & 0xFFFF)
+        cg = ClusterGraph.build(graph, [WorkerSpec() for _ in range(5)],
+                                collective_mode=mode)
+        prev = cg.simulate()
+        hits = 0
+        for trial in range(12):
+            # bandwidth-only perturbations keep the dirty set to the
+            # collective tasks (the realistic sweep axis); a rare
+            # compute perturbation exercises the large-cone bail path
+            specs = [WorkerSpec(bandwidth_scale=1.0 + rng.random(),
+                                compute_scale=1.5 if trial == 5 else 1.0)
+                     for _ in range(5)]
+            if rng.random() < 0.4:      # uniform point: small dirty cone
+                specs = [specs[0]] * 5
+            cg.retune(specs)
+            inc = cg.simulate_incremental(prev)
+            full = cg.simulate()
+            if inc is not None:
+                hits += 1
+                self._assert_same(inc.global_result, full.global_result)
+            prev = full
+        assert hits > 0     # the route must actually engage
+
+    def test_folded_incremental(self, graph):
+        fg = fold_cluster(graph, [WorkerSpec() for _ in range(64)],
+                          collective_mode="ring")
+        prev = fg.simulate()
+        fg.retune([WorkerSpec(bandwidth_scale=1.3)] * 64)
+        inc = fg.simulate_incremental(prev)
+        full = fg.simulate()
+        assert inc is not None
+        self._assert_same(inc.global_result, full.global_result)
+        assert set(inc.per_worker) == set(range(64))
+
+
+class TestScenarioIntegration:
+    def test_forced_fold_matches_materialized_predict(self, graph):
+        spec_list = [WorkerSpec() for _ in range(8)]
+        folded = Scenario(graph, layer_grad_bytes=GRADS,
+                          workers=spec_list, fold=True).predict("ddp")
+        mat = Scenario(graph, layer_grad_bytes=GRADS,
+                       workers=spec_list, fold=False).predict("ddp")
+        from repro.core.fold import FoldedClusterResult
+        assert folded.predicted == mat.predicted
+        assert isinstance(folded.cluster, FoldedClusterResult)
+        assert not isinstance(mat.cluster, FoldedClusterResult)
+
+    def test_sweep_incremental_matches_rebuilds(self, graph):
+        s = Scenario(graph, layer_grad_bytes=GRADS,
+                     workers=[WorkerSpec() for _ in range(6)])
+        grid = {"workers": [[WorkerSpec(bandwidth_scale=b)] * 6
+                            for b in (1.0, 1.3, 0.8, 2.0)]}
+        reused = s.sweep("ddp", grid, reuse=True)
+        rebuilt = s.sweep("ddp", grid, reuse=False)
+        for a, b in zip(reused, rebuilt):
+            assert a.predicted == pytest.approx(b.predicted, rel=1e-12)
+
+    def test_forced_fold_sweep_matches_materialized(self, graph):
+        grid = {"workers": [[WorkerSpec(bandwidth_scale=b)] * 8
+                            for b in (1.0, 1.5, 0.75)]}
+        f = Scenario(graph, layer_grad_bytes=GRADS,
+                     workers=[WorkerSpec() for _ in range(8)],
+                     fold=True).sweep("ddp", grid)
+        m = Scenario(graph, layer_grad_bytes=GRADS,
+                     workers=[WorkerSpec() for _ in range(8)],
+                     fold=False).sweep("ddp", grid)
+        for a, b in zip(f, m):
+            assert a.predicted == b.predicted
+
+    def test_auto_threshold(self, graph):
+        s = Scenario(graph, layer_grad_bytes=GRADS, workers=8)
+        assert not s._fold_enabled()            # < 64 workers: stay exact-simple
+        assert s._fold_enabled(64)
+        assert not Scenario(graph, layer_grad_bytes=GRADS, workers=8,
+                            fold=False)._fold_enabled(4096)
+
+
+class TestRebuildReason(object):
+    def test_sweep_rebuild_reasons(self, graph, tmp_path):
+        from repro.obs import spans as spans_mod
+        path = str(tmp_path / "spans.jsonl")
+        spans_mod.configure(path)
+        try:
+            s = Scenario(graph, layer_grad_bytes=GRADS,
+                         workers=[WorkerSpec() for _ in range(4)])
+            s.sweep("ddp", [{"workers": [WorkerSpec()] * 4},
+                            {"workers": [WorkerSpec()] * 6},
+                            {"workers": [WorkerSpec(
+                                bandwidth_scale=1.4)] * 6}])
+        finally:
+            spans_mod.configure(None)
+        import json
+        recs = [json.loads(l) for l in open(path)]
+        pts = [r["attrs"] for r in recs
+               if r["name"] == "scenario.sweep_point"]
+        assert pts[0]["route"] == "rebuild"
+        assert pts[0]["reason"] == "first_point"
+        assert pts[1]["route"] == "rebuild"
+        assert pts[1]["reason"] == "worker_count_changed"
+        assert pts[2]["route"] == "cluster_retune"
+        assert pts[2]["sim"] in ("incremental", "full")

@@ -1,0 +1,118 @@
+"""Hypothesis properties for symmetry folding + incremental re-simulation.
+
+Skipped when the optional ``hypothesis`` dev dependency is absent (same
+policy as the other ``*_properties`` modules); the deterministic
+seeded-random equivalents always run in ``test_fold.py``.
+
+Properties pinned here:
+
+* folded == materialized on randomized mixed clusters — uniform rings,
+  pod-uniform hierarchical layouts, fused straggler mixes, and hybrid
+  PP×DP plans — makespan to 1e-9 and per-class breakdowns equal to the
+  per-worker rollups of the materialized build;
+* incremental-vs-full re-simulation equivalence over random retune
+  perturbations: whenever ``simulate_incremental`` engages, its timeline
+  (start/finish/busy/makespan) is exactly the full replay's.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.core import ClusterGraph, WorkerSpec, fold_cluster
+from repro.parallel.plan import ParallelPlan, StageProfile
+from synthgraphs import training_step_graph
+
+GRAPH = training_step_graph(layers=4)
+
+scales = st.sampled_from([0.5, 0.75, 1.0, 1.5, 2.0])
+
+
+def _assert_equiv(fg, cg):
+    rf, rm = fg.simulate(), cg.simulate()
+    assert rf.makespan == pytest.approx(rm.makespan, abs=1e-9)
+    pw_f, pw_m = rf.per_worker, rm.per_worker
+    assert set(pw_f) == set(pw_m)
+    for w in pw_m:
+        assert pw_f[w].makespan == pytest.approx(pw_m[w].makespan,
+                                                 abs=1e-9)
+        for k, v in pw_m[w].breakdown.items():
+            assert pw_f[w].breakdown.get(k, 0.0) == pytest.approx(
+                v, abs=1e-9)
+
+
+@hypothesis.given(n=st.integers(2, 10), bw=scales,
+                  mode=st.sampled_from(["ring", "fused", "hierarchical"]))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_uniform_cluster_folds_exactly(n, bw, mode):
+    specs = [WorkerSpec(bandwidth_scale=bw) for _ in range(n)]
+    fg = fold_cluster(GRAPH, specs, collective_mode=mode)
+    assert fg is not None and fg.num_classes < n
+    _assert_equiv(fg, ClusterGraph.build(GRAPH, specs,
+                                         collective_mode=mode))
+
+
+@hypothesis.given(pods=st.lists(st.tuples(st.integers(1, 4), scales),
+                                min_size=1, max_size=3))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_pod_uniform_hierarchical_folds_exactly(pods):
+    specs = [WorkerSpec(pod=p, bandwidth_scale=bw)
+             for p, (k, bw) in enumerate(pods) for _ in range(k)]
+    fg = fold_cluster(GRAPH, specs, collective_mode="hierarchical")
+    cg = ClusterGraph.build(GRAPH, specs, collective_mode="hierarchical")
+    if fg is None:      # no class smaller than its pod: nothing to fold
+        assert all(k <= 2 for k, _ in pods)
+        return
+    _assert_equiv(fg, cg)
+
+
+@hypothesis.given(n=st.integers(3, 8), slow=scales,
+                  straggler=st.integers(0, 7))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_straggler_mix_folds_exactly(n, slow, straggler):
+    specs = [WorkerSpec(compute_scale=slow if i == straggler % n else 1.0)
+             for i in range(n)]
+    fg = fold_cluster(GRAPH, specs, collective_mode="fused")
+    cg = ClusterGraph.build(GRAPH, specs, collective_mode="fused")
+    if fg is None:      # slow == 1.0 degenerates to uniform, still folds
+        assert n <= 2
+        return
+    _assert_equiv(fg, cg)
+
+
+@hypothesis.given(S=st.integers(2, 4), M=st.integers(2, 6),
+                  dp=st.integers(2, 4), stage_scales=st.lists(scales,
+                                                              min_size=4,
+                                                              max_size=4))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_hybrid_pp_dp_folds_exactly(S, M, dp, stage_scales):
+    profs = tuple(StageProfile(index=s, layers=(f"l{s}",), fwd_s=2e-3,
+                               bwd_s=4e-3, update_s=1e-3, act_bytes=4e6,
+                               grad_bytes=8e6) for s in range(S))
+    plan = ParallelPlan(profs, M, "gpipe", dp)
+    specs = [WorkerSpec(compute_scale=stage_scales[w // dp % 4])
+             for w in range(plan.num_workers)]
+    fg = plan.fold_place(specs)
+    assert fg is not None and fg.num_classes == S
+    _assert_equiv(fg, plan.place(specs))
+
+
+@hypothesis.given(bws=st.lists(st.tuples(scales, scales, scales),
+                               min_size=1, max_size=8))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_incremental_matches_full_over_retunes(bws):
+    cg = ClusterGraph.build(GRAPH, [WorkerSpec() for _ in range(3)],
+                            collective_mode="ring")
+    prev = cg.simulate()
+    for b0, b1, b2 in bws:
+        cg.retune([WorkerSpec(bandwidth_scale=b) for b in (b0, b1, b2)])
+        inc = cg.simulate_incremental(prev)
+        full = cg.simulate()
+        if inc is not None:
+            gi, gf = inc.global_result, full.global_result
+            assert gi.makespan == gf.makespan
+            assert gi.start == gf.start
+            assert gi.finish == gf.finish
+            assert gi.thread_busy == gf.thread_busy
+        prev = full
