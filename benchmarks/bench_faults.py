@@ -1,0 +1,137 @@
+"""Goodput-simulator throughput: O(fault events) cost + steady-state reuse.
+
+The renewal engine advances checkpoint blocks in closed form, so simulating
+a month of training must cost O(fault events), *not* O(steps): a 30-day
+horizon at 20 steps/s is ~50M steps but only a few thousand fault episodes.
+And a fault-policy sweep (checkpoint interval, elastic, hot spares) over a
+FaultScenario must reuse ONE steady-state cluster evaluation — only the
+cheap goodput re-simulation varies per point.
+
+Timed stages:
+
+* ``sim`` — :func:`repro.faults.simulate_goodput` on seeded failure
+  timelines at two event densities (8x apart) over the same horizon;
+* ``policy_sweep`` — 8-point checkpoint-interval sweep on one shared
+  :class:`repro.faults.FaultScenario` (steady-state cache hit per point)
+  vs naive fresh-scenario-per-point rebuilds.
+
+Acceptance (wired into CI):
+
+* scaling gate: per-event sim cost at the dense size <= 3x the sparse
+  size — an O(steps) regression in the block advance blows past it by
+  orders of magnitude;
+* reuse gate: shared-scenario sweep >= 3x faster than per-point rebuilds,
+  with bit-identical goodput per point.
+
+CSV: case,unit,count,seconds,per_unit_us,vs_baseline
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import WorkerSpec
+from repro.faults import (FaultScenario, RecoveryModel, exponential_failures,
+                          simulate_goodput)
+
+from benchmarks.bench_sweep import LAYERS, step_graph
+from benchmarks.common import fmt_csv
+
+HORIZON_S = 30 * 86400.0            # one month
+STEP_S = 0.05                       # 20 steps/s -> ~52M steps simulated
+SIM_WORKERS = 8
+SIM_SIZES = {"sparse": 24.0, "dense": 3.0}      # per-worker MTBF, hours
+SCALING_GATE = 3.0
+REUSE_GATE = 3.0
+SWEEP_KS = [50, 100, 200, 400, 800, 1600, 3200, 6400]
+
+gate_margins = None
+
+
+def _best_of(fn, n=3):
+    best, out = float("inf"), None
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run() -> str:
+    global gate_margins
+    rows = []
+
+    # ---- stage 1: raw engine cost scales with fault events ------------
+    rec = RecoveryModel(checkpoint_bytes=16e9)
+    per_event = {}
+    for name, mtbf_h in SIM_SIZES.items():
+        tl = exponential_failures(SIM_WORKERS, mtbf_h * 3600.0, HORIZON_S,
+                                  seed=11)
+        t, rep = _best_of(lambda: simulate_goodput(
+            n_workers=SIM_WORKERS, horizon_s=HORIZON_S, timeline=tl,
+            recovery=rec, ckpt_interval_steps=500, step_s=STEP_S))
+        # failures of an already-down worker coalesce into the in-flight
+        # repair, so the count can run slightly under the event count
+        assert 0 < rep.failures <= len(tl), "engine dropped fault events"
+        per_event[name] = t / max(1, len(tl))
+        rows.append(["sim", "events", len(tl), f"{t:.4f}",
+                     f"{per_event[name] * 1e6:.1f}",
+                     f"{per_event[name] / per_event['sparse']:.2f}"])
+    ratio = per_event["dense"] / per_event["sparse"]
+    assert ratio <= SCALING_GATE, (
+        f"goodput sim cost is not O(events): per-event cost ratio "
+        f"{ratio:.2f} at 8x density (gate: {SCALING_GATE}) — the closed-"
+        f"form block advance has regressed to per-step work")
+
+    # ---- stage 2: policy sweep reuses the steady-state evaluation -----
+    # cluster route (ring-wired 16-worker DDP graph, ~12k tasks): the
+    # steady-state evaluation is the expensive part the cache must amortize
+    def _make():
+        return FaultScenario(
+            graph=step_graph(),
+            layer_grad_bytes={f"l{i}": 40e6 for i in range(LAYERS)},
+            workers=[WorkerSpec() for _ in range(16)],
+            mtbf_s=6 * 3600.0, horizon_s=86400.0, seed=1)
+
+    shared = _make()
+
+    def _sweep_shared():
+        return [shared.predict(f"ddp,ckpt_interval:steps={k}").goodput
+                for k in SWEEP_KS]
+
+    def _sweep_fresh():
+        return [_make().predict(f"ddp,ckpt_interval:steps={k}").goodput
+                for k in SWEEP_KS]
+
+    t_shared, g_shared = _best_of(_sweep_shared, n=2)
+    t_fresh, g_fresh = _best_of(_sweep_fresh, n=2)
+    assert g_shared == g_fresh, (
+        "steady-state reuse changed the goodput predictions")
+    assert len(shared._steady_cache) == 1, (
+        f"ckpt-interval sweep should hit ONE cached steady state, found "
+        f"{len(shared._steady_cache)} entries")
+    speedup = t_fresh / t_shared
+    rows.append(["policy_sweep", "points", len(SWEEP_KS), f"{t_shared:.3f}",
+                 f"{t_shared / len(SWEEP_KS) * 1e6:.0f}",
+                 f"{speedup:.1f}x_vs_fresh"])
+    rows.append(["policy_sweep_fresh", "points", len(SWEEP_KS),
+                 f"{t_fresh:.3f}",
+                 f"{t_fresh / len(SWEEP_KS) * 1e6:.0f}", "1.0"])
+    assert speedup >= REUSE_GATE, (
+        f"fault-policy sweep only {speedup:.2f}x faster than per-point "
+        f"scenario rebuilds (acceptance: >= {REUSE_GATE}x)")
+
+    gate_margins = {
+        "per_event_cost_ratio": {"value": round(ratio, 2),
+                                 "limit": SCALING_GATE},
+        "steady_reuse_speedup": {"value": round(speedup, 2),
+                                 "floor": REUSE_GATE},
+        "steady_cache_entries": {"value": len(shared._steady_cache),
+                                 "limit": 1},
+    }
+    return fmt_csv(rows, ["case", "unit", "count", "seconds", "per_unit_us",
+                          "vs_baseline"])
+
+
+if __name__ == "__main__":
+    print(run())

@@ -34,6 +34,7 @@ BENCHES = {
     "serving_sim": "benchmarks.bench_serving",
     "obs_telemetry": "benchmarks.bench_obs",
     "cluster_scale": "benchmarks.bench_scale",
+    "faults_goodput": "benchmarks.bench_faults",
 }
 
 

@@ -1,5 +1,5 @@
 from .checkpoint import (save_checkpoint, restore_checkpoint, latest_step,
-                         CheckpointManager)
+                         checkpoint_bytes, CheckpointManager)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "CheckpointManager"]
+           "checkpoint_bytes", "CheckpointManager"]

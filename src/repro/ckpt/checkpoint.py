@@ -38,6 +38,17 @@ import numpy as np
 
 _SEP = "."
 
+# dtypes np.save writes as-is; anything else (bf16/fp8/...) rides a float32
+# carrier (lossless upcast) — shared by save_checkpoint and checkpoint_bytes
+_SAVED_DTYPES = (np.float32, np.float64, np.int32, np.int64, np.int8,
+                 np.uint8, np.bool_, np.float16, np.uint16, np.uint32)
+
+
+def _carrier_dtype(dtype) -> np.dtype:
+    dt = np.dtype(dtype)
+    return dt if dt in (np.dtype(d) for d in _SAVED_DTYPES) \
+        else np.dtype(np.float32)
+
 
 def _flatten(tree) -> List[Tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -69,10 +80,9 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     for key, leaf in _flatten(tree):
         arr = np.asarray(jax.device_get(leaf))
         orig_dtype = str(arr.dtype)
-        if arr.dtype not in (np.float32, np.float64, np.int32, np.int64,
-                             np.int8, np.uint8, np.bool_, np.float16,
-                             np.uint16, np.uint32):
-            arr = arr.astype(np.float32)      # bf16/fp8 carriers (lossless up)
+        carrier = _carrier_dtype(arr.dtype)
+        if arr.dtype != carrier:
+            arr = arr.astype(carrier)
         np.save(os.path.join(tmp, key + ".npy"), arr)
         manifest["leaves"][key] = {"shape": list(arr.shape),
                                    "dtype": orig_dtype}
@@ -84,6 +94,32 @@ def save_checkpoint(directory: str, step: int, tree: Any,
         shutil.rmtree(final)
     os.rename(tmp, final)
     return final
+
+
+def checkpoint_bytes(tree: Any) -> int:
+    """Deterministic on-disk payload size of ``save_checkpoint(tree)``.
+
+    Sums leaf ``shape x carrier-dtype`` over the tree using the same
+    dtype-carrier rules as the save path (exotic dtypes ride a float32
+    carrier), without materializing or transferring any array — abstract
+    values (``jax.ShapeDtypeStruct``, ``jax.eval_shape`` outputs) size the
+    same as concrete ones.  Manifest/COMMIT bookkeeping is excluded: this
+    is the number the fault simulator's RecoveryModel turns into restore
+    seconds over the host DMA bandwidth.
+    """
+    total = 0
+    for _, leaf in _flatten(tree):
+        shape = getattr(leaf, "shape", None)
+        if shape is None:
+            shape = np.shape(leaf)
+        n = 1
+        for d in shape:
+            n *= int(d)
+        dtype = getattr(leaf, "dtype", None)
+        if dtype is None:
+            dtype = np.asarray(leaf).dtype
+        total += n * _carrier_dtype(dtype).itemsize
+    return total
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -145,15 +181,27 @@ class CheckpointManager:
         return path
 
     def save_async(self, step: int, tree: Any, **meta) -> None:
+        """Snapshot to host synchronously, write in the background.
+
+        One save in flight at a time: joins the previous one first, so a
+        failed background write surfaces *here* (or in :meth:`wait`) as
+        its exception rather than being dropped with the worker thread.
+        """
         self.wait()                      # one in flight at a time
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         self._pending = self._pool.submit(self.save, step, host_tree, **meta)
 
     def wait(self) -> None:
+        """Join the in-flight save, re-raising its exception exactly once.
+
+        The pending future is cleared *before* ``result()`` can raise:
+        a failed save must not wedge the manager by re-raising forever
+        and blocking every later ``save_async``.
+        """
         with self._lock:
             if self._pending is not None:
-                self._pending.result()
-                self._pending = None
+                fut, self._pending = self._pending, None
+                fut.result()
 
     def restore_latest(self, like, mesh=None, shardings=None):
         return restore_checkpoint(self.directory, like, mesh=mesh,

@@ -879,14 +879,40 @@ class Stack(Optimization):
         # union of the members' ideal cases is the stack's ideal case
         return all(o.headroom(s, tf) for o in self.opts)
 
+    def _param_owners(self) -> Dict[str, List[int]]:
+        owners: Dict[str, List[int]] = {}
+        for i, o in enumerate(self.opts):
+            for p in o.param_names():
+                owners.setdefault(p, []).append(i)
+        return owners
+
     def param_names(self) -> Tuple[str, ...]:
-        return ()
+        """Member parameters owned by exactly one member — those route
+        unambiguously through :meth:`with_params`, which is what lets
+        ``sweep("ddp,ckpt_interval", {"steps": [...]})`` move a stacked
+        member's knob.  Shared names are excluded (set them on the member
+        directly)."""
+        return tuple(p for p, idx in self._param_owners().items()
+                     if len(idx) == 1)
 
     def with_params(self, **params: Any) -> "Optimization":
-        if params:
-            raise OptimizationError(
-                "cannot set parameters on a Stack; parameterize its members")
-        return self
+        if not params:
+            return self
+        owners = self._param_owners()
+        out = list(self.opts)
+        for k, v in params.items():
+            idx = owners.get(k, [])
+            if not idx:
+                raise OptimizationError(
+                    f"no member of stack {self.spec()!r} has parameter "
+                    f"{k!r}")
+            if len(idx) > 1:
+                raise OptimizationError(
+                    f"parameter {k!r} is ambiguous in stack "
+                    f"{self.spec()!r} ({len(idx)} members define it); "
+                    f"set it on the member directly")
+            out[idx[0]] = out[idx[0]].with_params(**{k: v})
+        return Stack(*out)
 
     def spec(self) -> str:
         return ",".join(o.spec() for o in self.opts)

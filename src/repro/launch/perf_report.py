@@ -386,6 +386,37 @@ def serving_report(args) -> None:
         print(export_graph_trace(p.graph, p.result, args.export_trace))
 
 
+def goodput_section(scenario, args) -> str:
+    """``--goodput``: wrap a built training scenario in a
+    :class:`repro.faults.FaultScenario` and report useful steps/hour,
+    availability and lost work for the baseline + ``--what-if`` stack.
+    Composes with ``--trace-dir`` (imported cluster) and with the
+    compiled-arch route (add ``--cluster N`` for a data-parallel fleet).
+    """
+    from repro.faults import FaultScenario, format_goodput_table
+
+    fscn = FaultScenario(
+        graph=scenario.graph, cost=scenario.cost,
+        layer_grad_bytes=scenario.layer_grad_bytes,
+        activation_bytes=scenario.activation_bytes,
+        workers=scenario.workers, traces=scenario.traces,
+        collective_mode=scenario.collective_mode,
+        mtbf_s=args.mtbf_hours * 3600.0, horizon_s=args.goodput_horizon,
+        ckpt_interval_steps=args.ckpt_interval)
+    base = "noop" if fscn.traces is not None or fscn.num_workers == 1 \
+        else "ddp"
+    preds = [fscn.predict(base)]
+    if args.what_if:
+        preds.append(fscn.predict(args.what_if))
+    lines = [f"== goodput: {fscn.num_workers} worker(s), per-worker MTBF "
+             f"{args.mtbf_hours:.1f}h, horizon "
+             f"{args.goodput_horizon / 3600.0:.1f}h, ckpt every "
+             f"{args.ckpt_interval} steps ==",
+             f"recovery: {fscn.recovery.describe()}",
+             format_goodput_table(preds)]
+    return "\n".join(lines)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -440,6 +471,21 @@ def main() -> None:
                     help="(--serving) Poisson arrival rate, req/s")
     ap.add_argument("--duration", type=float, default=5.0,
                     help="(--serving) arrival window, seconds")
+    ap.add_argument("--goodput", action="store_true",
+                    help="goodput route: wrap the built scenario in a "
+                         "fault-injection simulation (repro.faults) and "
+                         "report useful steps/hour under the --mtbf-hours "
+                         "failure process; composes with --trace-dir and "
+                         "--cluster, --what-if takes fault-policy stacks "
+                         "(ckpt_interval, elastic, hot_spare, "
+                         "straggler_mitigation) — see repro.launch.goodput "
+                         "for the full knob surface")
+    ap.add_argument("--mtbf-hours", type=float, default=6.0,
+                    help="(--goodput) per-worker MTBF, hours")
+    ap.add_argument("--goodput-horizon", type=float, default=86400.0,
+                    help="(--goodput) simulated wall-clock, seconds")
+    ap.add_argument("--ckpt-interval", type=int, default=100,
+                    help="(--goodput) baseline checkpoint interval, steps")
     args = ap.parse_args()
 
     if args.telemetry:
@@ -449,6 +495,11 @@ def main() -> None:
         serving_report(args)
         return
     if args.trace_dir:
+        if args.goodput:
+            _, scenario = load_trace_scenario(args.trace_dir,
+                                              args.straggler)
+            print(goodput_section(scenario, args))
+            return
         trace_report(args)
         return
     if not args.arch or not args.shape:
@@ -468,6 +519,12 @@ def main() -> None:
         cell = build_cell(cfg, shape, mesh)
         compiled = cell.lower().compile()
     module = parse_hlo_module(compiled.as_text())
+    if args.goodput:
+        scenario, _ = build_scenario(module, cfg, cost,
+                                     workers=args.cluster or 1,
+                                     straggler=args.straggler)
+        print(goodput_section(scenario, args))
+        return
     tot = aggregate_with_attention_split(module, cost)
 
     fb = flash_traffic(cfg, shape, chips)
